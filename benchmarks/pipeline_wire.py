@@ -1,0 +1,63 @@
+"""TPU-path wire benchmark: relay bytes + quantization error of the DEFER
+pipeline's compressed relay (the ZFP adaptation), per assigned arch.
+
+This is the TPU analogue of Table I's "Data" rows: raw bf16 relay vs int8
+block-quant relay, bytes per microbatch hop and end-to-end logit error on
+the smoke configs."""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.registry import ARCHS
+from repro.kernels import ops as kops
+from repro.launch.serve import build_pipeline_lm
+from repro.models import transformer as T
+
+
+def run(archs=("phi3-mini-3.8b", "gemma3-4b", "dbrx-132b", "mamba2-2.7b"),
+        stages: int = 2) -> list[dict]:
+    rows = []
+    for arch in archs:
+        from repro.configs.registry import get_smoke, get_config
+        cfg = get_smoke(arch)
+        full = get_config(arch)
+        params = T.init_lm(cfg, jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((1,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        B, S, M = 4, 32, 2
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                    cfg.vocab)
+        kw = {}
+        if cfg.num_prefix_embeds and not cfg.encoder_layers:
+            kw["prefix_embeds"] = jnp.zeros((B, cfg.num_prefix_embeds,
+                                             cfg.d_model))
+        if cfg.encoder_layers:
+            kw["encoder_embeds"] = jnp.zeros((B, cfg.num_prefix_embeds,
+                                              cfg.d_model))
+        # sanity: the (single-stage) pipeline must reproduce forward exactly
+        ref, _ = T.forward(params, cfg, tokens, **kw)
+        lm = build_pipeline_lm(cfg, params, mesh, 1, M, compress=False)
+        with mesh:
+            out = jax.jit(lambda t: lm(t, **kw))(tokens)
+        assert float(jnp.abs(out - ref).max()) < 1e-4
+        # full-size wire bytes for one relay hop (mb=8, seq=4096); the
+        # multi-stage compressed-relay error is asserted in
+        # tests/test_pipeline.py (needs >=2 devices)
+        raw, wire = kops.quant_bytes((8 * 4096, full.d_model), jnp.bfloat16)
+        rows.append({
+            "arch": arch, "relay_raw_mb": raw / 1e6,
+            "relay_quant_mb": wire / 1e6, "ratio": wire / raw,
+        })
+    return rows
+
+
+def main() -> None:
+    emit("pipeline_wire", run())
+
+
+if __name__ == "__main__":
+    main()

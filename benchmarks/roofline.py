@@ -1,0 +1,101 @@
+"""§Roofline: three-term roofline per (arch x shape) from dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s/link)
+
+The dry-run emits PER-DEVICE cost terms (the SPMD module is per-device), so
+global = per_device x chips and the chip count cancels; we keep the global
+convention of the assignment.  MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D
+(MoE) for train (2·N·D inference), giving the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import ART, emit
+from repro.configs.registry import ARCHS, all_pairs, get_config
+from repro.core.metrics import TPU_V5E, roofline
+
+
+def model_flops(arch: str, shape_kind: str, seq: int, batch: int) -> float:
+    cfg = get_config(arch)
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = batch * seq
+        return 6.0 * n * tokens
+    if shape_kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n * tokens
+    return 2.0 * n * batch          # decode: one token per sequence
+
+
+def load_artifact(arch: str, shape: str, pods: int = 1) -> dict | None:
+    fn = os.path.join(ART, "dryrun", f"{arch}__{shape}__pod{pods}.json")
+    if not os.path.exists(fn):
+        return None
+    with open(fn) as f:
+        return json.load(f)
+
+
+SHAPE_META = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+              "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch, shape in all_pairs():
+        art = load_artifact(arch, shape)
+        if art is None:
+            continue
+        if art["status"] == "skip":
+            rows.append({"arch": arch, "shape": shape, "status": "SKIP(design)"})
+            continue
+        if art["status"] != "ok" or "cost" not in art:
+            rows.append({"arch": arch, "shape": shape,
+                         "status": art.get("status", "?")})
+            continue
+        chips = art["chips"]
+        cost = art["cost"]
+        # per-device -> global
+        flops = cost["flops"] * chips
+        hbytes = cost["bytes_accessed"] * chips
+        cbytes = sum(cost["collective_bytes"].values()) * chips
+        terms = roofline(flops, hbytes, cbytes, chips, TPU_V5E)
+        seq, batch = SHAPE_META[shape]
+        mflops = model_flops(arch, art["kind"], seq, batch)
+        mem = art["memory"]
+        hbm_gb = (mem["argument_bytes"] + mem["temp_bytes"]
+                  + mem["output_bytes"]) / 1e9
+        rows.append({
+            "arch": arch, "shape": shape, "status": "ok",
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "bound_s": terms.bound_s,
+            "model_flops": mflops,
+            "useful_ratio": mflops / flops if flops else 0.0,
+            "hbm_gb_per_dev": hbm_gb,
+            "fits_16gb": hbm_gb <= 16.0,
+        })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit("roofline", rows)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        from collections import Counter
+        doms = Counter(r["dominant"] for r in ok)
+        print(f"# dominant-term counts: {dict(doms)}")
+        worst = sorted(ok, key=lambda r: r["useful_ratio"])[:3]
+        print("# worst useful-compute ratios:",
+              [(r["arch"], r["shape"], round(r["useful_ratio"], 3))
+               for r in worst])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Edge emulation study: sweep models x node counts x codecs (the paper's
+full evaluation grid) and print Fig-2/Fig-3-style summaries.
+
+    PYTHONPATH=src python examples/edge_emulation.py [--quick]
+"""
+import argparse
+
+from repro.core.emulator import CodecConfig, emulate
+from repro.models.cnn import BUILDERS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    models = ["resnet50"] if args.quick else list(BUILDERS)
+    nodes = (4, 8) if args.quick else (4, 6, 8)
+
+    print(f"{'model':10s} {'nodes':>5s} {'cps':>8s} {'speedup':>8s} "
+          f"{'E/node (J)':>11s} {'payload MB':>11s}")
+    for model in models:
+        g = BUILDERS[model](batch=1)
+        for n in nodes:
+            r = emulate(g, n, CodecConfig("zfp", "none", 16))
+            print(f"{model:10s} {n:5d} {r.throughput_cps:8.2f} "
+                  f"{r.speedup:8.2f} {r.per_node_energy_j:11.3f} "
+                  f"{r.total_payload_mb:11.2f}")
+        print(f"{model:10s} {1:5d} {r.single_device_cps:8.2f} "
+              f"{1.0:8.2f} {r.single_device_energy_j:11.3f} {0.0:11.2f}")
+
+    print("\ncodec study (ResNet50, 4 nodes):")
+    for ser, comp in [("json", "none"), ("json", "lz4"), ("zfp", "none"),
+                      ("zfp", "lz4")]:
+        r = emulate(g if args.quick else BUILDERS["resnet50"](batch=1), 4,
+                    CodecConfig(ser, comp, 16))
+        print(f"  {r.codec:18s} cps={r.throughput_cps:6.3f} "
+              f"payload={r.total_payload_mb:7.2f} MB "
+              f"overhead={r.overhead_s*1e3:7.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

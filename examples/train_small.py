@@ -1,0 +1,59 @@
+"""End-to-end driver (deliverable b): train a ~100M-param dense model for a
+few hundred steps on the synthetic pipeline, with checkpoints and resume.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300] [--dim 768]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_lm_iter
+from repro.train import checkpoint as ckpt
+from repro.train.loop import train
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=384,
+                    help="768 gives ~100M params (slower on 1 CPU core)")
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name=f"dense-{args.dim}", family="dense", num_layers=args.layers,
+        d_model=args.dim, num_heads=args.dim // 64, kv_heads=args.dim // 128,
+        d_ff=4 * args.dim, vocab=args.vocab, gated_mlp=True, remat=False,
+        source="example")
+    print(f"model: {cfg.param_count()/1e6:.1f}M params "
+          f"({args.layers}L x d{args.dim})")
+
+    it = make_lm_iter(cfg, args.batch, args.seq, seed=0)
+    opt = OptConfig(lr=2e-3, warmup_steps=max(10, args.steps // 20),
+                    total_steps=args.steps)
+
+    def log(m):
+        print(f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.2f}  "
+              f"{m['wall_s']:.0f}s")
+
+    params, _, hist = train(cfg, opt, it, num_steps=args.steps,
+                            log_every=20, callback=log)
+    if args.ckpt_dir:
+        out = ckpt.save(args.ckpt_dir, args.steps, params)
+        print(f"checkpoint -> {out}")
+    drop = hist[0]["loss"] - hist[-1]["loss"]
+    print(f"\nloss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"({drop:.2f} nats learned)")
+    assert drop > 1.0, "training must visibly learn the synthetic structure"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""DEFER model partitioning.
+
+The paper cuts the layer DAG into ``k`` contiguous sub-networks, choosing
+layers "based on what would split the model up into a similar number of layers
+for each partition".  We implement that strategy (``equal_layers``) plus two
+cost-aware ones the dispatcher can plan with:
+
+* ``balanced_flops`` — classic linear-partition DP minimizing the maximum
+  per-partition FLOPs (the pipeline bottleneck term),
+* ``balanced_latency`` — same DP but on stage *service time* =
+  compute_time + outbound transfer time under a :class:`LinkModel`, which is
+  the quantity that actually bounds DEFER's steady-state throughput.
+
+All strategies return a :class:`Partition` — the cut indices plus per-stage
+cost summaries that the emulator / pipeline runtime consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+import numpy as np
+
+from repro.core.graph import LayerGraph
+
+Strategy = Literal["equal_layers", "balanced_flops", "balanced_latency"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Per-hop network model (the CORE-emulated Ethernet in the paper)."""
+
+    bandwidth_bytes_per_s: float = 12.5e6     # 100 Mbit Ethernet
+    latency_s: float = 2e-4
+    energy_per_bit_j: float = 10e-12          # paper: 10 pJ/bit (Ethernet)
+    compression_ratio: float = 1.0            # payload multiplier (<1 = compressed)
+
+    def transfer_time(self, payload_bytes: float) -> float:
+        wire = payload_bytes * self.compression_ratio
+        return self.latency_s + wire / self.bandwidth_bytes_per_s
+
+    def transfer_energy(self, payload_bytes: float) -> float:
+        wire = payload_bytes * self.compression_ratio
+        return wire * 8.0 * self.energy_per_bit_j
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """Per-node compute model (an edge CPU in the paper, a TPU chip here)."""
+
+    flops_per_s: float = 20e9                 # edge-class CPU w/ SIMD
+    tdp_w: float = 15.0                       # paper's energy = time * TDP
+
+    def compute_time(self, flops: float) -> float:
+        return flops / self.flops_per_s
+
+
+@dataclasses.dataclass
+class StageCost:
+    start: int                  # node index range [start, stop)
+    stop: int
+    flops: float
+    param_bytes: int
+    out_bytes: int              # activation bytes crossing the outbound cut
+    compute_time_s: float = 0.0
+    transfer_time_s: float = 0.0
+
+    @property
+    def service_time_s(self) -> float:
+        # A DEFER node can't accept sample t+1 until it computed AND relayed
+        # sample t (single socket thread pair) -> service = compute + transfer.
+        return self.compute_time_s + self.transfer_time_s
+
+
+@dataclasses.dataclass
+class Partition:
+    graph_name: str
+    cuts: tuple[int, ...]       # k-1 cut indices: cut after node i
+    stages: list[StageCost]
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def bottleneck_s(self) -> float:
+        return max(s.service_time_s for s in self.stages)
+
+    def ranges(self) -> list[tuple[int, int]]:
+        return [(s.start, s.stop) for s in self.stages]
+
+
+def _computes(compute, num_stages: int) -> list[ComputeModel]:
+    """Normalize to one ComputeModel per stage (heterogeneous nodes — the
+    paper's stated future work: 'heterogeneous model partitions can be more
+    effectively distributed for higher inference throughput')."""
+    if isinstance(compute, ComputeModel):
+        return [compute] * num_stages
+    compute = list(compute)
+    assert len(compute) == num_stages, \
+        f"{len(compute)} compute models for {num_stages} stages"
+    return compute
+
+
+def _stage_costs(graph: LayerGraph, bounds: Sequence[int],
+                 link: LinkModel, computes: list[ComputeModel]
+                 ) -> list[StageCost]:
+    stages: list[StageCost] = []
+    for si in range(len(bounds) - 1):
+        lo, hi = bounds[si], bounds[si + 1]
+        nodes = graph.nodes[lo:hi]
+        flops = sum(n.flops for n in nodes)
+        pbytes = sum(n.param_bytes for n in nodes)
+        obytes = graph.cut_cost(hi - 1) if hi < len(graph.nodes) else nodes[-1].out_bytes
+        st = StageCost(lo, hi, flops, pbytes, obytes)
+        st.compute_time_s = computes[si].compute_time(flops)
+        st.transfer_time_s = link.transfer_time(obytes)
+        stages.append(st)
+    return stages
+
+
+def partition(graph: LayerGraph, num_stages: int,
+              strategy: Strategy = "balanced_latency",
+              link: LinkModel | None = None,
+              compute: "ComputeModel | Sequence[ComputeModel] | None" = None
+              ) -> Partition:
+    """Cut ``graph`` into ``num_stages`` contiguous partitions.
+
+    ``compute`` may be a sequence of per-node models (heterogeneous edge
+    cluster): the balanced strategies then assign more work to faster
+    nodes (stage i runs on node i — the chain order is fixed by DEFER's
+    topology).
+    """
+    link = link or LinkModel()
+    computes = _computes(compute or ComputeModel(), num_stages)
+    hetero = len({c.flops_per_s for c in computes}) > 1
+    n = len(graph.nodes)
+    if not 1 <= num_stages <= n:
+        raise ValueError(f"num_stages={num_stages} out of range for {n} layers")
+
+    if strategy == "equal_layers":
+        # The paper's strategy: similar number of layers per partition.
+        bounds = [round(i * n / num_stages) for i in range(num_stages + 1)]
+        bounds = sorted(set(bounds))
+        while len(bounds) < num_stages + 1:  # degenerate tiny graphs
+            for i in range(len(bounds) - 1):
+                if bounds[i + 1] - bounds[i] > 1:
+                    bounds.insert(i + 1, bounds[i] + 1)
+                    break
+    elif strategy in ("balanced_flops", "balanced_latency"):
+        if strategy == "balanced_flops" and not hetero:
+            w = np.array([node.flops for node in graph.nodes], dtype=np.float64)
+            edge = np.zeros(n, dtype=np.float64)
+            rates = np.ones(num_stages)
+        else:
+            w = np.array([node.flops for node in graph.nodes],
+                         dtype=np.float64)
+            rates = np.array([c.flops_per_s for c in computes])
+            if strategy == "balanced_latency":
+                edge = np.array(
+                    [link.transfer_time(graph.cut_cost(i))
+                     for i in range(n - 1)] + [0.0], dtype=np.float64)
+            else:
+                edge = np.zeros(n, dtype=np.float64)
+        bounds = _linear_partition_dp(w, edge, num_stages, rates)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    stages = _stage_costs(graph, bounds, link, computes)
+    return Partition(graph.name, tuple(bounds[1:-1]), stages)
+
+
+def _linear_partition_dp(w: np.ndarray, edge: np.ndarray, k: int,
+                         rates: np.ndarray | None = None) -> list[int]:
+    """Minimize the max of (sum of w in stage / rate_j + edge at the cut).
+
+    O(n^2 k) DP — n is layer count (<= a few hundred), fine.
+    ``edge[i]`` is the cost charged to a stage whose last node is i
+    (the outbound transfer of the cut after node i; edge[n-1] = 0).
+    ``rates[j]`` divides stage j's work (heterogeneous nodes); None = 1.
+    """
+    n = len(w)
+    prefix = np.concatenate([[0.0], np.cumsum(w)])
+    if rates is None:
+        rates = np.ones(k)
+
+    def stage_cost(lo: int, hi: int, j: int) -> float:  # nodes [lo, hi)
+        return (prefix[hi] - prefix[lo]) / rates[j] + edge[hi - 1]
+
+    INF = float("inf")
+    # dp[j][i] = minimal bottleneck splitting first i nodes into j stages
+    dp = np.full((k + 1, n + 1), INF)
+    cut = np.zeros((k + 1, n + 1), dtype=np.int64)
+    dp[0][0] = 0.0
+    for j in range(1, k + 1):
+        for i in range(j, n - (k - j) + 1):
+            best, arg = INF, j - 1
+            for m in range(j - 1, i):
+                c = max(dp[j - 1][m], stage_cost(m, i, j - 1))
+                if c < best:
+                    best, arg = c, m
+            dp[j][i] = best
+            cut[j][i] = arg
+    bounds = [n]
+    i = n
+    for j in range(k, 0, -1):
+        i = int(cut[j][i])
+        bounds.append(i)
+    return bounds[::-1]

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerical ground truth the kernels are validated
+against (``tests/test_kernels.py`` sweeps shapes/dtypes and asserts
+allclose).  They are deliberately written in the most obvious way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TILE_R, TILE_C = 8, 128  # TPU VREG tile: 8 sublanes x 128 lanes
+
+
+# -- block quantization (the ZFP fixed-rate adaptation) -----------------------
+
+def quantize_blocks_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fixed-rate shared-scale int8 quantization per (8,128) tile.
+
+    x [R, C] (R % 8 == 0, C % 128 == 0) -> (q int8 [R, C],
+    scales f32 [R/8, C/128]).  scale = absmax/127 per tile; q = round(x/scale).
+    """
+    R, C = x.shape
+    tr, tc = R // TILE_R, C // TILE_C
+    xt = x.astype(jnp.float32).reshape(tr, TILE_R, tc, TILE_C)
+    absmax = jnp.abs(xt).max(axis=(1, 3))                       # [tr, tc]
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xt / scale[:, None, :, None]), -127, 127)
+    return q.astype(jnp.int8).reshape(R, C), scale
+
+
+def dequantize_blocks_ref(q: jax.Array, scale: jax.Array,
+                          dtype=jnp.float32) -> jax.Array:
+    R, C = q.shape
+    tr, tc = R // TILE_R, C // TILE_C
+    qt = q.astype(jnp.float32).reshape(tr, TILE_R, tc, TILE_C)
+    return (qt * scale[:, None, :, None]).reshape(R, C).astype(dtype)
+
+
+# -- single-token decode attention ---------------------------------------------
+
+def decode_attention_ref(q, k, v, kpos, pos, window, scale):
+    """q [B,1,H,hd]; k/v [B,C,kv,hd]; kpos [B,C] absolute position per cache
+    slot (-1 = empty); pos [B] current position.  GQA broadcast; returns
+    [B,1,H,hd] in f32."""
+    B, _, H, hd = q.shape
+    C, kv = k.shape[1], k.shape[2]
+    g = H // kv
+    qg = q.astype(jnp.float32).reshape(B, kv, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, kf) * scale       # [B,kv,g,C]
+    delta = pos[:, None] - kpos                                  # [B,C]
+    valid = (kpos >= 0) & (delta >= 0)
+    if window is not None:
+        valid &= delta < window
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, vf)
+    return out.reshape(B, 1, H, hd)
+
+
+# -- SSD (Mamba2) chunked scan ---------------------------------------------------
+
+def ssd_scan_ref(xc, dtc, A, Bc, Cc, init_state):
+    """Chunked state-space-dual scan (arXiv:2405.21060), plain jnp.
+
+    xc [B,nc,Q,H,P]; dtc [B,nc,Q,H] (>0); A [H] (<0); Bc/Cc [B,nc,Q,N]
+    (single B/C group broadcast over heads); init_state [B,H,P,N] f32.
+    Returns (y [B,nc,Q,H,P] in xc.dtype, final_state [B,H,P,N] f32).
+    """
+    Bb, nc, Q, H, P = xc.shape
+    f32 = jnp.float32
+
+    def body(state, inp):
+        xq, dtq, Bq, Cq = inp
+        l = dtq.astype(f32) * A                              # [B,Q,H]
+        cum = jnp.cumsum(l, axis=1)
+        Lmat = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,Q,Q,H]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        Lmat = jnp.where(causal[None, :, :, None], Lmat, 0.0)
+        CB = jnp.einsum("bqn,bsn->bqs", Cq.astype(f32), Bq.astype(f32))
+        scores = CB[:, :, :, None] * Lmat * dtq.astype(f32)[:, None, :, :]
+        y = jnp.einsum("bqsh,bshp->bqhp", scores, xq.astype(f32))
+        y += jnp.einsum("bqn,bhpn->bqhp", Cq.astype(f32), state) \
+            * jnp.exp(cum)[:, :, :, None]
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)
+        dx = xq.astype(f32) * (dtq.astype(f32) * decay_to_end)[..., None]
+        new_state = state * jnp.exp(cum[:, -1])[:, :, None, None] \
+            + jnp.einsum("bqhp,bqn->bhpn", dx, Bq.astype(f32))
+        return new_state, y.astype(xc.dtype)
+
+    final, ys = jax.lax.scan(
+        body, init_state.astype(f32),
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space dual) chunked scan.
+
+The SSD algorithm (arXiv:2405.21060) reformulates the selective-state-space
+recurrence as, per chunk of Q tokens, one quadratic *attention-like* term
+(MXU matmuls) plus a rank-N running-state correction carried across chunks.
+This kernel executes the per-(batch, head) scan with the chunk index as the
+innermost (sequential) grid dimension and the running state held in VMEM
+scratch — the HBM traffic is exactly one read of x/dt/B/C and one write of y
+per token, with zero state spills:
+
+    grid = (B, H, nc)                      # nc sequential, state persists
+
+Per instance: xq [Q, P], dtq [Q], Bq/Cq [Q, N], state [P, N] f32 scratch.
+All four matmuls ([Q,N]x[N,Q], [Q,Q]x[Q,P], [Q,N]x[N,P], [P,Q]x[Q,N]) are
+MXU-shaped for Q in {128, 256}, N/P in {64, 128}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+                y_ref, fin_ref, state_ref, *, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    xq = x_ref[0, 0, :, 0].astype(jnp.float32)             # [Q, P]
+    dtq = dt_ref[0, 0, :, 0].astype(jnp.float32)           # [Q]
+    A = a_ref[0]                                           # scalar (<0)
+    Bq = b_ref[0, 0].astype(jnp.float32)                   # [Q, N]
+    Cq = c_ref[0, 0].astype(jnp.float32)                   # [Q, N]
+    Q = xq.shape[0]
+
+    l = dtq * A                                            # [Q] <= 0
+    cum = jnp.cumsum(l)                                    # [Q]
+    # intra-chunk attention-like term
+    Lmat = jnp.exp(cum[:, None] - cum[None, :])            # [Q, Q]
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+    CB = jax.lax.dot_general(Cq, Bq, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = CB * Lmat * causal * dtq[None, :]             # [Q, Q]
+    y = jax.lax.dot_general(scores, xq, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # inter-chunk: incoming state contribution  C_t state^T * exp(cum_t)
+    state = state_ref[...]                                 # [P, N]
+    y += jax.lax.dot_general(Cq, state, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: decay + sum_t dt_t decay_t x_t B_t^T
+    decay_to_end = jnp.exp(cum[-1] - cum)                  # [Q]
+    dx = xq * (dtq * decay_to_end)[:, None]                # [Q, P]
+    state_ref[...] = state * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        dx, Bq, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        fin_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(xc, dtc, A, Bc, Cc, init_state, interpret: bool = False):
+    """xc [B,nc,Q,H,P]; dtc [B,nc,Q,H]; A [H]; Bc/Cc [B,nc,Q,N];
+    init_state [B,H,P,N] f32 -> (y [B,nc,Q,H,P], final_state [B,H,P,N])."""
+    B, nc, Q, H, P = xc.shape
+    N = Bc.shape[-1]
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), xc.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, A.astype(jnp.float32), Bc, Cc, init_state.astype(jnp.float32))
+    return y, fin

@@ -1,0 +1,58 @@
+"""The three canonical steps each input-shape kind lowers.
+
+Signatures match ``launch.specs.input_specs`` keys exactly; all three are
+pure functions of pytrees so ``jax.jit(...).lower(**specs)`` works with
+ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig | None = None,
+                    unroll: bool = False) -> Callable:
+    opt = opt or OptConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = T.loss_fn(p, cfg, batch, unroll=unroll)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, stats = apply_updates(params, grads, opt_state, opt)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch["tokens"],
+                         prefix_embeds=batch.get("prefix_embeds"),
+                         encoder_embeds=batch.get("encoder_embeds"),
+                         unroll=unroll)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    """One decode token with a KV/SSM cache of seq_len (the serve_step)."""
+    def serve_step(params, token, pos, caches):
+        return T.decode_step(params, cfg, token, pos, caches, unroll=unroll)
+
+    return serve_step
+
+
+def step_for(cfg: ModelConfig, kind: str, unroll: bool = False) -> Callable:
+    if kind == "train":
+        return make_train_step(cfg, unroll=unroll)
+    if kind == "prefill":
+        return make_prefill_step(cfg, unroll=unroll)
+    return make_serve_step(cfg, unroll=unroll)

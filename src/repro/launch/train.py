@@ -1,0 +1,91 @@
+"""Training launcher: pjit train loop on whatever mesh is available.
+
+On the production mesh this is the baseline data x tensor layout from
+``repro.sharding``; on this CPU container it runs reduced (smoke) configs on
+the host mesh — the same code path either way.
+
+    python -m repro.launch.train --arch phi3-mini-3.8b --steps 100 \
+        --batch 8 --seq 128 [--smoke] [--ckpt-dir ckpts]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import sharding as sh
+from repro.configs.registry import ARCHS, get_config, get_smoke
+from repro.data.pipeline import make_lm_iter
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptConfig, init_opt_state
+
+
+def run(arch: str, steps: int, batch: int, seq: int, smoke: bool = True,
+        ckpt_dir: str | None = None, ckpt_every: int = 100,
+        log_every: int = 10, lr: float = 1e-3, seed: int = 0,
+        callback=None):
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    mesh = make_host_mesh()
+    opt = OptConfig(lr=lr, warmup_steps=max(2, steps // 20), total_steps=steps)
+    key = jax.random.PRNGKey(seed)
+
+    params = T.init_lm(cfg, key)
+    start = 0
+    if ckpt_dir and (latest := ckpt.latest_step(ckpt_dir)) is not None:
+        like = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        params = ckpt.restore(ckpt_dir, latest, like)
+        start = latest
+        print(f"resumed from step {latest}")
+    opt_state = init_opt_state(params)
+
+    p_sh = sh.param_shardings(params, mesh)
+    params = jax.device_put(params, p_sh)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    it = make_lm_iter(cfg, batch, seq, seed=seed)
+    history = []
+    t0 = time.perf_counter()
+    with mesh:
+        for step in range(start, start + steps):
+            batch_np = next(it)
+            metrics = None
+            params, opt_state, metrics = step_fn(params, opt_state, batch_np)
+            if step % log_every == 0 or step == start + steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, wall_s=time.perf_counter() - t0)
+                history.append(m)
+                print(f"step {step:5d} loss={m['loss']:.4f} "
+                      f"gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e} "
+                      f"({m['wall_s']:.1f}s)", flush=True)
+                if callback:
+                    callback(m)
+            if ckpt_dir and (step + 1) % ckpt_every == 0:
+                ckpt.save(ckpt_dir, step + 1, params)
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, start + steps, params)
+    return params, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (needs a real cluster)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+    run(args.arch, args.steps, args.batch, args.seq, smoke=not args.full,
+        ckpt_dir=args.ckpt_dir, lr=args.lr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Attention: GQA with RoPE, chunked (memory-bounded) causal attention,
+banded sliding-window attention, cross-attention, and cached decode.
+
+Shapes: x [B, S, d]; K/V heads ``kv``; query heads ``H = g * kv``.
+Caches: K,V as [B, C, kv, hd] where C = full seq for global layers or the
+window size (ring buffer) for sliding-window layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, init_linear, init_rmsnorm, linear, rmsnorm
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    num_heads: int
+    kv_heads: int
+    head_dim: int
+    rope_theta: float = 10_000.0
+    window: int | None = None        # sliding window (tokens), None = global
+    causal: bool = True
+    q_chunk: int = 1024              # chunking for memory-bounded attention
+
+
+def init_attn(key, s: AttnSpec, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": init_rmsnorm(s.d_model, dtype),
+        "wq": init_linear(ks[0], s.d_model, s.num_heads * s.head_dim, dtype),
+        "wk": init_linear(ks[1], s.d_model, s.kv_heads * s.head_dim, dtype),
+        "wv": init_linear(ks[2], s.d_model, s.kv_heads * s.head_dim, dtype),
+        "wo": init_linear(ks[3], s.num_heads * s.head_dim, s.d_model, dtype),
+    }
+
+
+def _project_qkv(p, s: AttnSpec, x, positions):
+    B, S, _ = x.shape
+    q = linear(p["wq"], x).reshape(B, S, s.num_heads, s.head_dim)
+    k = linear(p["wk"], x).reshape(B, S, s.kv_heads, s.head_dim)
+    v = linear(p["wv"], x).reshape(B, S, s.kv_heads, s.head_dim)
+    q = apply_rope(q, positions, s.rope_theta)
+    k = apply_rope(k, positions, s.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [B,Cq,H,hd], k/v [B,Ck,kv,hd] (GQA broadcast), mask [B?,Cq,Ck]."""
+    B, Cq, H, hd = q.shape
+    kv = k.shape[2]
+    g = H // kv
+    qg = q.reshape(B, Cq, kv, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Cq, H, hd)
+
+
+def attention(p: dict, s: AttnSpec, x: jax.Array, positions: jax.Array,
+              eps: float = 1e-5, kv_override=None) -> jax.Array:
+    """Full-sequence attention (train / prefill), memory-bounded.
+
+    Chunks queries with ``lax.scan`` so live logits are [B,H,Cq,S] not
+    [B,H,S,S]; sliding-window layers use a banded gather so their FLOPs and
+    memory scale with S * window, not S^2.
+    """
+    B, S, _ = x.shape
+    h = rmsnorm(p["ln"], x, eps)
+    q, k, v = _project_qkv(p, s, h, positions)
+    scale = 1.0 / np.sqrt(s.head_dim)
+
+    C = min(s.q_chunk, S)
+    if S % C != 0:  # small/smoke shapes: single chunk
+        C = S
+    nq = S // C
+    qs = q.reshape(B, nq, C, s.num_heads, s.head_dim)
+    pos_q = positions.reshape(B, nq, C) if positions.ndim == 2 else \
+        jnp.broadcast_to(positions.reshape(nq, C)[None], (B, nq, C))
+
+    if s.window is not None and s.window < S:
+        out = _banded_attention(qs, k, v, pos_q, positions, s, scale, C)
+    else:
+        out = _chunked_attention(qs, k, v, pos_q, positions, s, scale, C)
+    out = out.reshape(B, S, s.num_heads * s.head_dim)
+    return x + linear(p["wo"], out)
+
+
+def _chunked_attention(qs, k, v, pos_q, pos_k, s, scale, C):
+    """scan over query chunks; each sees the full K (causal-masked)."""
+    B = qs.shape[0]
+    if pos_k.ndim == 1:
+        pos_k = jnp.broadcast_to(pos_k[None], (B, pos_k.shape[0]))
+
+    def body(_, inp):
+        qc, pq = inp                       # [B,C,H,hd], [B,C]
+        mask = jnp.ones((B, C, pos_k.shape[1]), bool)
+        if s.causal:
+            mask = pq[:, :, None] >= pos_k[:, None, :]
+        return None, _sdpa(qc, k, v, mask, scale)
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(pos_q, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1)        # [B,nq,C,H,hd]
+
+
+def _banded_attention(qs, k, v, pos_q, pos_k, s, scale, C):
+    """Sliding window: q chunk i attends only to k chunks [i-nb+1 .. i].
+
+    nb = ceil(window/C) + 1 chunks; FLOPs ~ S * (nb*C) instead of S^2.
+    """
+    B, nq, _, H, hd = qs.shape
+    S = k.shape[1]
+    nb = int(np.ceil(s.window / C)) + 1
+    kc = k.reshape(B, nq, C, s.kv_heads, hd)
+    vc = v.reshape(B, nq, C, s.kv_heads, hd)
+    pos_kc = (pos_k if pos_k.ndim == 2 else jnp.broadcast_to(pos_k[None], (B, S))
+              ).reshape(B, nq, C)
+
+    idx = jnp.arange(nq)[:, None] - jnp.arange(nb - 1, -1, -1)[None, :]  # [nq,nb]
+    valid_chunk = idx >= 0
+    idx = jnp.clip(idx, 0, nq - 1)
+
+    def body(_, inp):
+        qc, pq, band_idx, bvalid = inp
+        kb = kc[:, band_idx].reshape(B, nb * C, s.kv_heads, hd)
+        vb = vc[:, band_idx].reshape(B, nb * C, s.kv_heads, hd)
+        pb = pos_kc[:, band_idx].reshape(B, nb * C)
+        delta = pq[:, :, None] - pb[:, None, :]
+        mask = (delta >= 0) & (delta < s.window)
+        mask &= jnp.repeat(bvalid, C)[None, None, :]
+        return None, _sdpa(qc, kb, vb, mask, scale)
+
+    _, outs = jax.lax.scan(
+        body, None,
+        (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(pos_q, 1, 0), idx, valid_chunk),
+    )
+    return jnp.moveaxis(outs, 0, 1)
+
+
+# -- cross attention (enc-dec) --------------------------------------------------
+
+def init_cross_attn(key, s: AttnSpec, dtype) -> dict:
+    return init_attn(key, s, dtype)
+
+
+def cross_attention(p: dict, s: AttnSpec, x: jax.Array, enc: jax.Array,
+                    enc_mask: jax.Array | None = None, eps: float = 1e-5):
+    B, S, _ = x.shape
+    Se = enc.shape[1]
+    h = rmsnorm(p["ln"], x, eps)
+    q = linear(p["wq"], h).reshape(B, S, s.num_heads, s.head_dim)
+    k = linear(p["wk"], enc).reshape(B, Se, s.kv_heads, s.head_dim)
+    v = linear(p["wv"], enc).reshape(B, Se, s.kv_heads, s.head_dim)
+    mask = jnp.ones((B, S, Se), bool) if enc_mask is None else \
+        jnp.broadcast_to(enc_mask[:, None, :], (B, S, Se))
+    out = _sdpa(q, k, v, mask, 1.0 / np.sqrt(s.head_dim))
+    return x + linear(p["wo"], out.reshape(B, S, -1))
+
+
+# -- cached decode ----------------------------------------------------------------
+
+def init_cache(s: AttnSpec, batch: int, max_len: int, dtype,
+               quant: bool = False) -> dict:
+    """KV cache.  ``quant=True`` stores int8 values with one f32 scale per
+    (position, kv head) row — §Perf HC5: halves cache residency and HBM
+    reads per decoded token (the ZFP fixed-rate idea applied to the cache).
+    """
+    C = min(max_len, s.window) if s.window else max_len
+    if quant:
+        return {
+            "k": jnp.zeros((batch, C, s.kv_heads, s.head_dim), jnp.int8),
+            "v": jnp.zeros((batch, C, s.kv_heads, s.head_dim), jnp.int8),
+            "kscale": jnp.zeros((batch, C, s.kv_heads), jnp.float32),
+            "vscale": jnp.zeros((batch, C, s.kv_heads), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, C, s.kv_heads, s.head_dim), dtype),
+        "v": jnp.zeros((batch, C, s.kv_heads, s.head_dim), dtype),
+    }
+
+
+def quant_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x [..., hd] -> (int8 [..., hd], scale [...]) with per-row absmax."""
+    absmax = jnp.abs(x.astype(jnp.float32)).max(axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequant_rows(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def decode_attention_ref(q, cache_k, cache_v, kpos, pos, window, scale):
+    """Single-token attention over a cache. q [B,1,H,hd]; cache [B,C,kv,hd];
+    kpos [B,C] absolute positions stored in each cache slot (-1 = empty)."""
+    delta = pos[:, None] - kpos                         # [B,C]
+    valid = (kpos >= 0) & (delta >= 0)
+    if window is not None:
+        valid &= delta < window
+    return _sdpa(q, cache_k, cache_v, valid[:, None, :], scale)
+
+
+def attention_decode(p: dict, s: AttnSpec, x: jax.Array, pos: jax.Array,
+                     cache: dict, kpos: jax.Array, eps: float = 1e-5,
+                     use_kernel: bool = False):
+    """One decode step.  x [B,1,d]; pos [B] absolute position; kpos [B,C].
+
+    Returns (out, new_cache, new_kpos).  Sliding-window caches are ring
+    buffers indexed by pos % window.
+    """
+    B = x.shape[0]
+    h = rmsnorm(p["ln"], x, eps)
+    q = linear(p["wq"], h).reshape(B, 1, s.num_heads, s.head_dim)
+    k = linear(p["wk"], h).reshape(B, 1, s.kv_heads, s.head_dim)
+    v = linear(p["wv"], h).reshape(B, 1, s.kv_heads, s.head_dim)
+    q = apply_rope(q, pos[:, None], s.rope_theta)
+    k = apply_rope(k, pos[:, None], s.rope_theta)
+
+    C = cache["k"].shape[1]
+    slot = (pos % C).astype(jnp.int32)                 # ring for window layers
+    bidx = jnp.arange(B)
+    nkpos = kpos.at[bidx, slot].set(pos)
+    quant = cache["k"].dtype == jnp.int8
+    new_cache: dict
+    if quant:
+        kq, ks = quant_rows(k[:, 0])
+        vq, vs = quant_rows(v[:, 0])
+        ck = cache["k"].at[bidx, slot].set(kq)
+        cv = cache["v"].at[bidx, slot].set(vq)
+        kss = cache["kscale"].at[bidx, slot].set(ks)
+        vss = cache["vscale"].at[bidx, slot].set(vs)
+        new_cache = {"k": ck, "v": cv, "kscale": kss, "vscale": vss}
+        ck_f = dequant_rows(ck, kss, x.dtype)
+        cv_f = dequant_rows(cv, vss, x.dtype)
+    else:
+        ck_f = ck = cache["k"].at[bidx, slot].set(k[:, 0])
+        cv_f = cv = cache["v"].at[bidx, slot].set(v[:, 0])
+        new_cache = {"k": ck, "v": cv}
+
+    scale = 1.0 / np.sqrt(s.head_dim)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q, ck_f, cv_f, nkpos, pos, s.window, scale)
+    else:
+        out = decode_attention_ref(q, ck_f, cv_f, nkpos, pos, s.window, scale)
+    out = x + linear(p["wo"], out.reshape(B, 1, -1))
+    return out, new_cache, nkpos
+
+
+def attn_flops(s: AttnSpec, tokens: int, kv_len: int) -> float:
+    proj = 2.0 * tokens * s.d_model * (s.num_heads + 2 * s.kv_heads + s.num_heads) \
+        * s.head_dim
+    eff_kv = min(kv_len, s.window) if s.window else kv_len
+    attn = 4.0 * tokens * eff_kv * s.num_heads * s.head_dim
+    return proj + attn

@@ -1,0 +1,192 @@
+"""The paper's own evaluation models — VGG16 / VGG19 / ResNet50 — as
+:class:`LayerGraph`s (NHWC, inference mode, BN folded to scale/bias form).
+
+These are the models DEFER partitions in Figs 2-3 / Tables I-II; building
+them as layer graphs gives the partitioner exactly what the Keras DAG gave
+the original: per-layer params, output shapes (=> inter-node payloads) and
+FLOPs.  ResNet50 keeps its residual branches as explicit ``add`` nodes, so
+cuts inside a bottleneck transfer BOTH crossing activations — the same wire
+cost the paper's chunked-socket transfer would pay.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import LayerGraph
+
+F32 = jnp.float32
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), F32)
+
+
+# -- layer apply fns (params, *inputs) -> output ---------------------------------
+
+def conv_apply(p, x, *, stride, padding):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def conv_bn_relu_apply(p, x, *, stride, padding, relu=True):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    y = y * p["scale"] + p["bias"]            # folded inference BN
+    return jax.nn.relu(y) if relu else y
+
+
+def relu_apply(p, x):
+    return jax.nn.relu(x)
+
+
+def add_relu_apply(p, a, b):
+    return jax.nn.relu(a + b)
+
+
+def maxpool_apply(p, x, *, size, stride):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, stride, stride, 1),
+        "SAME" if size == 3 else "VALID")
+
+
+def gap_apply(p, x):
+    return x.mean(axis=(1, 2))
+
+
+def flatten_apply(p, x):
+    return x.reshape(x.shape[0], -1)
+
+
+def fc_apply(p, x, *, relu):
+    y = x @ p["w"] + p["b"]
+    return jax.nn.relu(y) if relu else y
+
+
+# -- cost helpers ------------------------------------------------------------------
+
+def conv_flops(out_shape, k, cin):
+    n = int(np.prod(out_shape))
+    return 2.0 * n * k * k * cin
+
+
+def fc_flops(batch, din, dout):
+    return 2.0 * batch * din * dout
+
+
+# -- VGG ---------------------------------------------------------------------------
+
+_VGG16_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+               512, 512, 512, "M", 512, 512, 512, "M"]
+_VGG19_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, 256, "M",
+               512, 512, 512, 512, "M", 512, 512, 512, 512, "M"]
+
+
+def _build_vgg(name: str, plan, batch: int = 1, image: int = 224,
+               num_classes: int = 1000) -> LayerGraph:
+    g = LayerGraph(name, _sds((batch, image, image, 3)))
+    h, w, cin = image, image, 3
+    prev = ""
+    ci = 0
+    for item in plan:
+        if item == "M":
+            h //= 2
+            w //= 2
+            nname = f"pool{ci}"
+            g.layer(nname, functools.partial(maxpool_apply, size=2, stride=2),
+                    {}, (prev,), _sds((batch, h, w, cin)), flops=0.0)
+        else:
+            cout = item
+            nname = f"conv{ci}"
+            spec = {"w": _sds((3, 3, cin, cout)), "b": _sds((cout,))}
+            g.layer(nname, functools.partial(conv_apply, stride=1, padding="SAME"),
+                    spec, (prev,), _sds((batch, h, w, cout)),
+                    flops=conv_flops((batch, h, w, cout), 3, cin))
+            # relu fused into a separate cheap node keeps layer-wise cuts
+            g.layer(f"relu{ci}", relu_apply, {}, (nname,),
+                    _sds((batch, h, w, cout)), flops=0.0)
+            nname = f"relu{ci}"
+            cin = cout
+        prev = nname
+        ci += 1
+    g.layer("flatten", flatten_apply, {}, (prev,),
+            _sds((batch, h * w * cin)), flops=0.0)
+    dims = [h * w * cin, 4096, 4096, num_classes]
+    prev = "flatten"
+    for i in range(3):
+        spec = {"w": _sds((dims[i], dims[i + 1])), "b": _sds((dims[i + 1],))}
+        g.layer(f"fc{i}", functools.partial(fc_apply, relu=i < 2), spec, (prev,),
+                _sds((batch, dims[i + 1])), flops=fc_flops(batch, dims[i], dims[i + 1]))
+        prev = f"fc{i}"
+    return g
+
+
+def vgg16(batch: int = 1) -> LayerGraph:
+    return _build_vgg("vgg16", _VGG16_PLAN, batch)
+
+
+def vgg19(batch: int = 1) -> LayerGraph:
+    return _build_vgg("vgg19", _VGG19_PLAN, batch)
+
+
+# -- ResNet50 ------------------------------------------------------------------------
+
+_R50_STAGES = [(3, 64, 256, 1), (4, 128, 512, 2), (6, 256, 1024, 2),
+               (3, 512, 2048, 2)]
+
+
+def resnet50(batch: int = 1, image: int = 224, num_classes: int = 1000
+             ) -> LayerGraph:
+    g = LayerGraph("resnet50", _sds((batch, image, image, 3)))
+    h = w = image // 2
+    # stem
+    spec = {"w": _sds((7, 7, 3, 64)), "scale": _sds((64,)), "bias": _sds((64,))}
+    g.layer("stem", functools.partial(conv_bn_relu_apply, stride=2, padding="SAME"),
+            spec, ("",), _sds((batch, h, w, 64)),
+            flops=conv_flops((batch, h, w, 64), 7, 3))
+    h //= 2
+    w //= 2
+    g.layer("stem_pool", functools.partial(maxpool_apply, size=3, stride=2),
+            {}, ("stem",), _sds((batch, h, w, 64)), flops=0.0)
+    prev, cin = "stem_pool", 64
+
+    def bn_conv(name, inp, k, cout, stride, relu, hh, ww, ci):
+        spec = {"w": _sds((k, k, ci, cout)), "scale": _sds((cout,)),
+                "bias": _sds((cout,))}
+        g.layer(name,
+                functools.partial(conv_bn_relu_apply, stride=stride,
+                                  padding="SAME", relu=relu),
+                spec, (inp,), _sds((batch, hh, ww, cout)),
+                flops=conv_flops((batch, hh, ww, cout), k, ci))
+        return name
+
+    for si, (blocks, cmid, cout, stride0) in enumerate(_R50_STAGES):
+        for bi in range(blocks):
+            stride = stride0 if bi == 0 else 1
+            hh, ww = h // stride, w // stride
+            base = f"s{si}b{bi}"
+            a = bn_conv(f"{base}_c1", prev, 1, cmid, 1, True, h, w, cin)
+            b = bn_conv(f"{base}_c2", a, 3, cmid, stride, True, hh, ww, cmid)
+            c = bn_conv(f"{base}_c3", b, 1, cout, 1, False, hh, ww, cmid)
+            if bi == 0:
+                sc = bn_conv(f"{base}_sc", prev, 1, cout, stride, False, hh, ww, cin)
+            else:
+                sc = prev
+            g.layer(f"{base}_add", add_relu_apply, {}, (c, sc),
+                    _sds((batch, hh, ww, cout)), flops=0.0)
+            prev, cin, h, w = f"{base}_add", cout, hh, ww
+    g.layer("gap", gap_apply, {}, (prev,), _sds((batch, cin)), flops=0.0)
+    g.layer("fc", functools.partial(fc_apply, relu=False),
+            {"w": _sds((cin, num_classes)), "b": _sds((num_classes,))},
+            ("gap",), _sds((batch, num_classes)),
+            flops=fc_flops(batch, cin, num_classes))
+    return g
+
+
+BUILDERS = {"resnet50": resnet50, "vgg16": vgg16, "vgg19": vgg19}

@@ -1,0 +1,103 @@
+"""Primitive layers: linear / norm / embedding / RoPE / MLP.
+
+Params are plain dict pytrees; every layer is an ``init_*`` returning params
+and a pure ``apply`` function.  Initializers take explicit keys so model init
+is fully deterministic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * np.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+# -- linear -----------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype) -> dict:
+    return {"w": he_init(key, (d_in, d_out), dtype)}
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"]
+
+
+# -- norms --------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# -- embedding ----------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+                      ).astype(dtype)}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["table"].T
+
+
+# -- RoPE ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    angles = angles[..., None, :]                           # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- MLP -------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"ln": init_rmsnorm(d, dtype),
+         "up": init_linear(ks[0], d, f, dtype),
+         "down": init_linear(ks[1], f, d, dtype)}
+    if gated:
+        p["gate"] = init_linear(ks[2], d, f, dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    h = rmsnorm(p["ln"], x, eps)
+    up = linear(p["up"], h)
+    if "gate" in p:
+        up = jax.nn.silu(linear(p["gate"], h)) * up
+    else:
+        up = jax.nn.gelu(up)
+    return x + linear(p["down"], up)
+
+
+def mlp_flops(d: int, f: int, gated: bool, tokens: int) -> float:
+    mats = 3 if gated else 2
+    return 2.0 * mats * d * f * tokens

@@ -1,0 +1,576 @@
+"""Composable transformer LM covering every assigned family.
+
+Families map to a repeating *unit* of layers that is scanned over
+(``lax.scan``) for compile-time O(1) HLO size:
+
+* dense / vlm    unit = ``len(window_pattern)`` (attn + MLP) layers
+                 (gemma3: 5 sliding-window + 1 global per unit)
+* moe            unit = 1 (attn + MoE) layer
+* ssm            unit = 1 Mamba2 layer
+* hybrid         unit = ``hybrid_unit`` Mamba2 layers + the SHARED
+                 (weight-tied) attention+MLP block (zamba2)
+* encdec / audio separate encoder and decoder unit stacks; decoder units
+                 add cross-attention over the encoder output
+
+``num_layers % unit`` remainder layers are stored in a small unrolled stack.
+
+Three entry points (used by launch/ for train and serve):
+  ``forward``      train/prefill logits (+ router aux loss)
+  ``prefill``      forward + KV/SSM caches for subsequent decode
+  ``decode_step``  one token through all layers with caches (serve_step)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import AttnSpec
+from repro.models.moe import MoESpec
+from repro.models.ssm import MambaSpec
+
+
+# -- specs ---------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig, window: int | None, causal: bool = True) -> AttnSpec:
+    return AttnSpec(cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.head_dim,
+                    cfg.rope_theta, window, causal)
+
+
+def moe_spec(cfg: ModelConfig) -> MoESpec:
+    return MoESpec(cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.moe)
+
+
+def mamba_spec(cfg: ModelConfig) -> MambaSpec:
+    return MambaSpec(cfg.d_model, cfg.ssm)
+
+
+def _window_at(cfg: ModelConfig, i: int) -> int | None:
+    return cfg.window_pattern[i % len(cfg.window_pattern)]
+
+
+def _unit_count(cfg: ModelConfig) -> tuple[int, int]:
+    u = cfg.unit_layers
+    return cfg.num_layers // u, cfg.num_layers % u
+
+
+# -- init -------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, pos_in_unit: int, dtype,
+                encoder: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    if cfg.family in ("ssm", "hybrid") and not encoder:
+        return {"mamba": ssm_mod.init_mamba(ks[0], mamba_spec(cfg), dtype)}
+    out: dict[str, Any] = {
+        "attn": attn_mod.init_attn(
+            ks[0], attn_spec(cfg, _window_at(cfg, pos_in_unit),
+                             causal=not encoder), dtype)
+    }
+    if cfg.moe and not encoder:
+        out["moe"] = moe_mod.init_moe(ks[1], moe_spec(cfg), dtype)
+    else:
+        out["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    if cfg.encoder_layers and not encoder:
+        out["cross"] = attn_mod.init_cross_attn(
+            ks[2], attn_spec(cfg, None, causal=False), dtype)
+    return out
+
+
+def _init_unit(key, cfg: ModelConfig, dtype, encoder: bool = False) -> dict:
+    u = 1 if encoder else cfg.unit_layers
+    ks = jax.random.split(key, u)
+    return {f"pos{i}": _init_layer(ks[i], cfg, i, dtype, encoder)
+            for i in range(u)}
+
+
+def init_lm(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    n_units, rem = _unit_count(cfg)
+    params: dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "units": jax.vmap(lambda k: _init_unit(k, cfg, dtype))(
+            jax.random.split(ks[1], n_units)),
+        "final_ln": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if rem:
+        # remainder layers: stacked single-layer units (window is an apply-time
+        # property, so all share pos-0 param shapes)
+        params["rem"] = jax.vmap(
+            lambda k: {"pos0": _init_layer(k, cfg, 0, dtype)})(
+            jax.random.split(ks[2], rem))
+    if cfg.family == "hybrid":
+        params["shared"] = {
+            "attn": attn_mod.init_attn(ks[3], attn_spec(cfg, None), dtype),
+            "mlp": L.init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype),
+        }
+    if cfg.encoder_layers:
+        params["enc_units"] = jax.vmap(
+            lambda k: _init_unit(k, cfg, dtype, encoder=True))(
+            jax.random.split(ks[5], cfg.encoder_layers))
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.init_linear(ks[6], cfg.d_model,
+                                          cfg.padded_vocab, dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_lm(cfg, k, dtype), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+# -- apply -------------------------------------------------------------------------
+
+def _tree_at(tree, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _scan_units(body, carry, units, remat: bool = False, unroll: bool = False,
+                remat_policy: str = "full"):
+    """scan `body` over the stacked-unit axis.
+
+    ``unroll=True`` emits a python loop instead of ``lax.scan`` — identical
+    math, but the lowered HLO contains every unit explicitly, so the
+    dry-run's ``cost_analysis()`` / collective-byte parse see true totals
+    (XLA cost analysis counts a while-loop body once).  Launch paths use it;
+    runtime paths keep the scan for O(1) HLO size.
+    """
+    if remat:
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    if not unroll:
+        return jax.lax.scan(body, carry, units)
+    n = jax.tree_util.tree_leaves(units)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, _tree_at(units, i))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _apply_layer(lp: dict, cfg: ModelConfig, x, positions, aux, window,
+                 enc_out=None, use_kernel=False, encoder=False):
+    if "mamba" in lp:
+        x = ssm_mod.mamba_block(lp["mamba"], mamba_spec(cfg), x,
+                                cfg.norm_eps, use_kernel)
+        return x, aux
+    s = attn_spec(cfg, window, causal=not encoder)
+    x = attn_mod.attention(lp["attn"], s, x, positions, cfg.norm_eps)
+    if "cross" in lp and enc_out is not None:
+        x = attn_mod.cross_attention(lp["cross"], attn_spec(cfg, None, False),
+                                     x, enc_out, eps=cfg.norm_eps)
+    if "moe" in lp:
+        x, a = moe_mod.moe_block(lp["moe"], moe_spec(cfg), x, cfg.norm_eps)
+        aux = aux + a
+    else:
+        x = L.mlp(lp["mlp"], x, cfg.norm_eps)
+    return x, aux
+
+
+def _apply_unit(up: dict, cfg: ModelConfig, x, positions, aux, shared=None,
+                enc_out=None, use_kernel=False, encoder=False, n_pos=None):
+    n_pos = n_pos or (1 if encoder else cfg.unit_layers)
+    for i in range(n_pos):
+        x, aux = _apply_layer(up[f"pos{i}"], cfg, x, positions, aux,
+                              _window_at(cfg, i), enc_out, use_kernel, encoder)
+    if shared is not None:
+        x = attn_mod.attention(shared["attn"], attn_spec(cfg, None), x,
+                               positions, cfg.norm_eps)
+        x = L.mlp(shared["mlp"], x, cfg.norm_eps)
+    return x, aux
+
+
+def _fuse_prefix(cfg: ModelConfig, x, prefix_embeds):
+    if prefix_embeds is None or cfg.num_prefix_embeds == 0:
+        return x
+    n = prefix_embeds.shape[1]
+    return jnp.concatenate([prefix_embeds.astype(x.dtype), x[:, n:]], axis=1)
+
+
+def _encode(params, cfg: ModelConfig, encoder_embeds, use_kernel=False,
+            unroll=False):
+    x = encoder_embeds
+    B, Se, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    aux = jnp.zeros((), jnp.float32)
+
+    def body(carry, up):
+        h, a = carry
+        h, a = _apply_unit(up, cfg, h, positions, a, use_kernel=use_kernel,
+                           encoder=True)
+        return (h, a), None
+
+    (x, aux), _ = _scan_units(body, (x, aux), params["enc_units"],
+                              remat=cfg.remat, unroll=unroll,
+                              remat_policy=cfg.remat_policy)
+    return x, aux
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            prefix_embeds=None, encoder_embeds=None, use_kernel=False,
+            unroll=False):
+    """tokens [B,S] -> logits [B,S,V]; returns (logits, aux_loss)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = _fuse_prefix(cfg, x, prefix_embeds)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    aux = jnp.zeros((), jnp.float32)
+
+    enc_out = None
+    if cfg.encoder_layers:
+        assert encoder_embeds is not None, "enc-dec model needs encoder_embeds"
+        enc_out, enc_aux = _encode(params, cfg, encoder_embeds, use_kernel,
+                                   unroll)
+        aux = aux + enc_aux
+
+    shared = params.get("shared")
+
+    def body(carry, up):
+        h, a = carry
+        h, a = _apply_unit(up, cfg, h, positions, a, shared=shared,
+                           enc_out=enc_out, use_kernel=use_kernel)
+        return (h, a), None
+
+    (x, aux), _ = _scan_units(body, (x, aux), params["units"],
+                              remat=cfg.remat, unroll=unroll,
+                              remat_policy=cfg.remat_policy)
+
+    _, rem = _unit_count(cfg)
+    if rem:
+        for i in range(rem):
+            up = _tree_at(params["rem"], i)
+            x, aux = _apply_layer(up["pos0"], cfg, x, positions, aux,
+                                  _window_at(cfg, i), enc_out, use_kernel)
+
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.linear(params["unembed"], x)
+    return _mask_pad_vocab(cfg, logits), aux
+
+
+def _mask_pad_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """Padded-vocab ids get -inf so softmax/argmax semantics are exact."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    ids = jnp.arange(cfg.padded_vocab)
+    return jnp.where(ids < cfg.vocab, logits, -1e30)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, use_kernel=False,
+            unroll=False):
+    """Next-token cross entropy (+ router aux)."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("prefix_embeds"),
+                          batch.get("encoder_embeds"), use_kernel, unroll)
+    labels = batch["labels"]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    return loss + w * aux, {"nll": loss, "aux": aux}
+
+
+# -- caches / decode -------------------------------------------------------------
+
+def _init_layer_cache(cfg: ModelConfig, pos_in_unit: int, batch: int,
+                      max_len: int, dtype, lp_kind: str):
+    if lp_kind == "mamba":
+        return ssm_mod.init_mamba_cache(mamba_spec(cfg), batch, dtype)
+    s = attn_spec(cfg, _window_at(cfg, pos_in_unit))
+    c = attn_mod.init_cache(s, batch, max_len, dtype,
+                            quant=cfg.kv_cache_quant)
+    c["kpos"] = jnp.full((batch, c["k"].shape[1]), -1, jnp.int32)
+    return c
+
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    return "mamba" if cfg.family in ("ssm", "hybrid") else "attn"
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    n_units, rem = _unit_count(cfg)
+    kind = _layer_kind(cfg)
+
+    def unit_cache(_):
+        c = {f"pos{i}": _init_layer_cache(cfg, i, batch, max_len, dtype, kind)
+             for i in range(cfg.unit_layers)}
+        if cfg.family == "hybrid":
+            sc = attn_mod.init_cache(attn_spec(cfg, None), batch, max_len, dtype)
+            sc["kpos"] = jnp.full((batch, max_len), -1, jnp.int32)
+            c["shared"] = sc
+        return c
+
+    caches: dict[str, Any] = {
+        "units": jax.vmap(unit_cache)(jnp.arange(n_units)),
+    }
+    if rem:
+        caches["rem"] = jax.vmap(
+            lambda i: {"pos0": _init_layer_cache(cfg, 0, batch, max_len, dtype,
+                                                 kind)})(jnp.arange(rem))
+        # NB: rem layer i uses window _window_at(cfg, i); cache sized per pos0.
+        # For gemma3 the remainder layers are all sliding-window => same size.
+    if cfg.encoder_layers:
+        caches["enc_out"] = jnp.zeros(
+            (batch, cfg.num_prefix_embeds, cfg.d_model), dtype)
+    return caches
+
+
+def _decode_layer(lp, cfg, x, pos, cache, window, enc_out, use_kernel):
+    if "mamba" in lp:
+        x, nc = ssm_mod.mamba_decode(lp["mamba"], mamba_spec(cfg), x,
+                                     cache, cfg.norm_eps)
+        return x, nc
+    s = attn_spec(cfg, window)
+    x, nkv, nkpos = attn_mod.attention_decode(
+        lp["attn"], s, x, pos, cache, cache["kpos"], cfg.norm_eps, use_kernel)
+    nc = {**nkv, "kpos": nkpos}
+    if "cross" in lp and enc_out is not None:
+        x = attn_mod.cross_attention(lp["cross"], attn_spec(cfg, None, False),
+                                     x, enc_out, eps=cfg.norm_eps)
+    if "moe" in lp:
+        x, _ = moe_mod.moe_block(lp["moe"], moe_spec(cfg), x, cfg.norm_eps)
+    else:
+        x = L.mlp(lp["mlp"], x, cfg.norm_eps)
+    return x, nc
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
+                pos: jax.Array, caches: dict, use_kernel=False, unroll=False):
+    """One serve step: token [B,1] (ids), pos [B] -> (logits [B,1,V], caches)."""
+    B = token.shape[0]
+    x = L.embed(params["embed"], token)
+    enc_out = caches.get("enc_out")
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        h = carry
+        up, uc = xs
+        ncs = {}
+        for i in range(cfg.unit_layers):
+            h, nc = _decode_layer(up[f"pos{i}"], cfg, h, pos, uc[f"pos{i}"],
+                                  _window_at(cfg, i), enc_out, use_kernel)
+            ncs[f"pos{i}"] = nc
+        if shared is not None:
+            s = attn_spec(cfg, None)
+            sc = uc["shared"]
+            hs = h
+            h, nkv, nkpos = attn_mod.attention_decode(
+                shared["attn"], s, hs, pos, sc, sc["kpos"], cfg.norm_eps,
+                use_kernel)
+            h = L.mlp(shared["mlp"], h, cfg.norm_eps)
+            ncs["shared"] = {**nkv, "kpos": nkpos}
+        return h, ncs
+
+    x, new_unit_caches = _scan_units(body, x,
+                                     (params["units"], caches["units"]),
+                                     unroll=unroll)
+    new_caches = dict(caches)
+    new_caches["units"] = new_unit_caches
+
+    _, rem = _unit_count(cfg)
+    if rem:
+        ncs = []
+        for i in range(rem):
+            up = _tree_at(params["rem"], i)
+            uc = _tree_at(caches["rem"], i)
+            x, nc = _decode_layer(up["pos0"], cfg, x, pos, uc["pos0"],
+                                  _window_at(cfg, i), enc_out, use_kernel)
+            ncs.append({"pos0": nc})
+        new_caches["rem"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *ncs)
+
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = (L.unembed(params["embed"], x) if cfg.tie_embeddings
+              else L.linear(params["unembed"], x))
+    return _mask_pad_vocab(cfg, logits), new_caches
+
+
+# -- prefill ----------------------------------------------------------------------
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            prefix_embeds=None, encoder_embeds=None, max_len: int | None = None,
+            use_kernel=False, unroll=False):
+    """Run the full prompt, returning (last_logits, caches) for decode.
+
+    Implemented as forward + cache construction per layer; attention layers
+    re-project K/V once more for cache filling (2 extra GEMMs per layer —
+    negligible vs attention itself, keeps the fast path allocation-free).
+    For simplicity and exactness we instead run layer-by-layer collecting
+    caches, mirroring forward()'s structure.
+    """
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = L.embed(params["embed"], tokens)
+    x = _fuse_prefix(cfg, x, prefix_embeds)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    aux = jnp.zeros((), jnp.float32)
+
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out, _ = _encode(params, cfg, encoder_embeds, use_kernel, unroll)
+
+    dtype = x.dtype
+    shared = params.get("shared")
+
+    def prefill_layer(lp, h, window, pos_in_unit):
+        """returns (new_h, cache)"""
+        if "mamba" in lp:
+            ms = mamba_spec(cfg)
+            hh = L.rmsnorm(lp["mamba"]["ln"], h, cfg.norm_eps)
+            z, xBC, dt_raw = ssm_mod._split_proj(ms, hh @ lp["mamba"]["in_proj"])
+            xBC_c, conv_state = ssm_mod._causal_conv(
+                xBC, lp["mamba"]["conv_w"], lp["mamba"]["conv_b"])
+            di = ms.d_inner
+            N = ms.ssm.state_dim
+            xs = xBC_c[..., :di].reshape(B, S, ms.n_heads, ms.ssm.head_dim)
+            Bm = xBC_c[..., di:di + N]
+            Cm = xBC_c[..., di + N:]
+            dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                                 + lp["mamba"]["dt_bias"])
+            A = -jnp.exp(lp["mamba"]["A_log"])
+            y, state = ssm_mod.ssd_chunked(xs, dt, A, Bm, Cm, ms.ssm.chunk,
+                                           use_kernel=use_kernel)
+            y = y + xs * lp["mamba"]["D"].astype(h.dtype)[None, None, :, None]
+            y = y.reshape(B, S, di)
+            y = L.rmsnorm(lp["mamba"]["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+            out = h + y @ lp["mamba"]["out_proj"]
+            return out, {"conv": conv_state, "ssd": state}
+        # attention layer: compute forward and fill cache
+        s = attn_spec(cfg, window)
+        out = attn_mod.attention(lp["attn"], s, h, positions, cfg.norm_eps)
+        hh = L.rmsnorm(lp["attn"]["ln"], h, cfg.norm_eps)
+        _, k, v = attn_mod._project_qkv(lp["attn"], s, hh, positions)
+        C = min(max_len, s.window) if s.window else max_len
+        ck = jnp.zeros((B, C, s.kv_heads, s.head_dim), dtype)
+        cv = jnp.zeros_like(ck)
+        kpos = jnp.full((B, C), -1, jnp.int32)
+        take = min(S, C)
+        src_pos = jnp.arange(S - take, S)
+        slots = src_pos % C
+        ck = ck.at[:, slots].set(k[:, S - take:])
+        cv = cv.at[:, slots].set(v[:, S - take:])
+        kpos = kpos.at[:, slots].set(jnp.broadcast_to(src_pos[None], (B, take)))
+        if cfg.kv_cache_quant:                     # §Perf HC5
+            ckq, ks = attn_mod.quant_rows(ck)
+            cvq, vs = attn_mod.quant_rows(cv)
+            return out, {"k": ckq, "v": cvq, "kscale": ks, "vscale": vs,
+                         "kpos": kpos}
+        return out, {"k": ck, "v": cv, "kpos": kpos}
+
+    def unit_body(carry, up):
+        h, a = carry
+        caches = {}
+        for i in range(cfg.unit_layers):
+            lp = up[f"pos{i}"]
+            if "mamba" in lp:
+                h, c = prefill_layer(lp, h, None, i)
+            else:
+                h, c = prefill_layer(lp, h, _window_at(cfg, i), i)
+                if "cross" in lp and enc_out is not None:
+                    h = attn_mod.cross_attention(
+                        lp["cross"], attn_spec(cfg, None, False), h, enc_out,
+                        eps=cfg.norm_eps)
+                if "moe" in lp:
+                    h, aa = moe_mod.moe_block(lp["moe"], moe_spec(cfg), h,
+                                              cfg.norm_eps)
+                    a = a + aa
+                else:
+                    h = L.mlp(lp["mlp"], h, cfg.norm_eps)
+            caches[f"pos{i}"] = c
+        if shared is not None:
+            h2, c = prefill_layer({"attn": shared["attn"]}, h, None, 0)
+            h = L.mlp(shared["mlp"], h2, cfg.norm_eps)
+            caches["shared"] = c
+        return (h, a), caches
+
+    (x, aux), unit_caches = _scan_units(unit_body, (x, aux), params["units"],
+                                        unroll=unroll)
+
+    caches: dict[str, Any] = {"units": unit_caches}
+    _, rem = _unit_count(cfg)
+    if rem:
+        rem_caches = []
+        for i in range(rem):
+            up = _tree_at(params["rem"], i)
+            lp = up["pos0"]
+            x, c = prefill_layer(lp, x, _window_at(cfg, i), i)
+            if "mamba" not in lp:
+                if "moe" in lp:
+                    x, aa = moe_mod.moe_block(lp["moe"], moe_spec(cfg), x,
+                                              cfg.norm_eps)
+                    aux = aux + aa
+                else:
+                    x = L.mlp(lp["mlp"], x, cfg.norm_eps)
+            rem_caches.append({"pos0": c})
+        caches["rem"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *rem_caches)
+    if enc_out is not None:
+        caches["enc_out"] = enc_out
+
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    last = x[:, -1:]
+    logits = (L.unembed(params["embed"], last) if cfg.tie_embeddings
+              else L.linear(params["unembed"], last))
+    return _mask_pad_vocab(cfg, logits), caches
+
+
+# -- hybrid attention layer bug guard: mamba layers ignore window ----------------
+
+
+def flops_estimate(cfg: ModelConfig, batch: int, seq: int,
+                   kind: str = "train") -> float:
+    """Analytic model FLOPs (fwd; x3 for train fwd+bwd) for the roofline's
+    MODEL_FLOPS / HLO_FLOPS utilization ratio."""
+    tokens = batch * seq
+    total = 0.0
+    for i in range(cfg.num_layers):
+        if cfg.family in ("ssm", "hybrid"):
+            total += ssm_mod.mamba_flops(mamba_spec(cfg), tokens)
+        else:
+            s = attn_spec(cfg, _window_at(cfg, i))
+            kv_len = seq if kind != "decode" else seq
+            total += attn_mod.attn_flops(s, tokens, kv_len)
+            if cfg.moe:
+                total += moe_mod.moe_flops(moe_spec(cfg), tokens)
+            else:
+                total += L.mlp_flops(cfg.d_model, cfg.d_ff, cfg.gated_mlp, tokens)
+    if cfg.family == "hybrid":
+        n_units = cfg.num_layers // cfg.hybrid_unit
+        s = attn_spec(cfg, None)
+        total += n_units * (attn_mod.attn_flops(s, tokens, seq)
+                            + L.mlp_flops(cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                                          tokens))
+    if cfg.encoder_layers:
+        etok = batch * cfg.num_prefix_embeds
+        s = attn_spec(cfg, None)
+        total += cfg.encoder_layers * (
+            attn_mod.attn_flops(s, etok, cfg.num_prefix_embeds)
+            + L.mlp_flops(cfg.d_model, cfg.d_ff, cfg.gated_mlp, etok))
+        total += cfg.num_layers * attn_mod.attn_flops(s, tokens,
+                                                      cfg.num_prefix_embeds)
+    total += 2.0 * tokens * cfg.d_model * cfg.vocab   # unembed
+    if kind == "train":
+        total *= 3.0
+    return total

@@ -1,0 +1,1 @@
+from repro.runtime.engine import InferenceEngine  # noqa: F401

@@ -1,0 +1,112 @@
+"""The DEFER dispatcher (paper Algorithm 1), in-process.
+
+Partitions the model, ships architecture + weights to each compute node
+(configuration step), then streams inference data into the head of the
+chain and collects FIFO results from the tail (distributed inference step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import threading
+import time
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core.graph import LayerGraph
+from repro.core.partitioner import LinkModel, Partition, partition
+from repro.runtime.node import ComputeNode
+from repro.runtime.wire import WireCodec, WireRecord
+
+
+@dataclasses.dataclass
+class DispatcherCodecs:
+    """Per-payload-type codec choice (the paper's three socket configs)."""
+
+    architecture: WireCodec = WireCodec("raw", "none")   # JSON spec, tiny
+    weights: WireCodec = WireCodec("raw", "none")
+    data: WireCodec = WireCodec("zfp", "none", zfp_rate=16)
+
+
+class Dispatcher:
+    """Owns the chain: planning, configuration, and the inference stream."""
+
+    def __init__(self, graph: LayerGraph, num_nodes: int,
+                 codecs: DispatcherCodecs | None = None,
+                 strategy: str = "equal_layers",
+                 link: LinkModel | None = None):
+        self.graph = graph
+        self.codecs = codecs or DispatcherCodecs()
+        self.partition: Partition = partition(
+            graph, num_nodes, strategy=strategy, link=link)
+        self.nodes: list[ComputeNode] = [
+            ComputeNode(i, self.codecs.data) for i in range(num_nodes)]
+        self.config_records: list[WireRecord] = []
+        self.result_queue: queue.Queue = queue.Queue()
+        for i in range(num_nodes - 1):
+            self.nodes[i].next_inbox = self.nodes[i + 1].inbox
+        self.nodes[-1].next_inbox = self.result_queue
+        self._configured = False
+
+    # -- configuration step --------------------------------------------------
+    def configure(self, params: dict[str, Any]) -> None:
+        """Ship each partition's architecture + weights over the wire."""
+        for node, (lo, hi) in zip(self.nodes, self.partition.ranges()):
+            names = [n.name for n in self.graph.slice_nodes(lo, hi)]
+            spec = {"layers": names,
+                    "next": node.index + 1 if node.index + 1 < len(self.nodes)
+                    else None}
+            arch_blob = json.dumps(spec).encode()
+            t0 = time.perf_counter()
+            if self.codecs.architecture.compression == "lz4":
+                from repro.core.codecs import Lz4Codec
+                arch_wire = Lz4Codec().compress(arch_blob)
+            else:
+                arch_wire = arch_blob
+            t1 = time.perf_counter()
+            self.config_records.append(WireRecord(
+                "architecture", len(arch_blob), len(arch_wire), t1 - t0))
+
+            stage_params = {name: params[name] for name in names}
+            weights_blob, rec = self.codecs.weights.encode_tree(
+                stage_params, "weights")
+            self.config_records.append(rec)
+            node.configure(self.graph, lo, hi, arch_blob, weights_blob,
+                           self.codecs.weights)
+        self._configured = True
+
+    # -- distributed inference step ----------------------------------------------
+    def start(self) -> None:
+        assert self._configured, "configure() before start()"
+        for node in self.nodes:
+            node.start()
+
+    def infer_stream(self, inputs: Iterable[np.ndarray]) -> list[np.ndarray]:
+        """Feed samples FIFO into the chain; block for all results, in order."""
+        self.start()
+        n = 0
+        feed_records = []
+        for x in inputs:
+            blob, rec = self.codecs.data.encode_tree({"": np.asarray(x)}, "data")
+            feed_records.append(rec)
+            self.nodes[0].inbox.put((n, blob))
+            n += 1
+        outputs: dict[int, np.ndarray] = {}
+        order = []
+        for _ in range(n):
+            seq, blob = self.result_queue.get()
+            flat, _ = self.codecs.data.decode_tree(blob)
+            (out,) = flat.values()
+            outputs[seq] = out
+            order.append(seq)
+        self.feed_records = feed_records
+        assert order == sorted(order), f"FIFO order violated: {order}"
+        return [outputs[i] for i in range(n)]
+
+    def shutdown(self) -> None:
+        self.nodes[0].stop()
+        for node in self.nodes[1:]:
+            if node._thread:
+                node._thread.join()

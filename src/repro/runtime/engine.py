@@ -1,0 +1,107 @@
+"""Top-level DEFER inference engine + measured metrics report.
+
+``InferenceEngine`` is the public API the examples use: build from a layer
+graph, run a stream of inputs through the emulated chain with *real*
+compute and *real* wire codecs, and report the paper's four metrics —
+throughput, per-node energy, overhead, payload — from measured timings
+(compute, serialize) plus the link model for wire time/energy (the part
+CORE emulates in the original).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.graph import LayerGraph
+from repro.core.metrics import EDGE, HardwareProfile, compute_energy_j, network_energy_j
+from repro.core.partitioner import LinkModel
+from repro.runtime.dispatcher import Dispatcher, DispatcherCodecs
+from repro.runtime.wire import CHUNK_BYTES
+
+
+@dataclasses.dataclass
+class EngineReport:
+    model: str
+    num_nodes: int
+    codec: str
+    samples: int
+    wall_s: float
+    throughput_cps: float              # measured inference cycles / second
+    modeled_throughput_cps: float      # incl. modeled wire time (paper setting)
+    per_node_energy_j: float
+    overhead_s: float                  # serialize+deserialize per cycle
+    payload_mb: float                  # inter-node payload per cycle
+    per_node: list[dict]
+
+
+class InferenceEngine:
+    def __init__(self, graph: LayerGraph, num_nodes: int,
+                 codecs: DispatcherCodecs | None = None,
+                 strategy: str = "equal_layers",
+                 hw: HardwareProfile = EDGE,
+                 link: LinkModel | None = None):
+        self.graph = graph
+        self.hw = hw
+        self.link = link or LinkModel(bandwidth_bytes_per_s=hw.link_bw,
+                                      energy_per_bit_j=hw.energy_per_bit_j)
+        self.dispatcher = Dispatcher(graph, num_nodes, codecs, strategy,
+                                     self.link)
+
+    def configure(self, params: dict) -> None:
+        self.dispatcher.configure(params)
+
+    def run(self, inputs: Iterable[np.ndarray]) -> tuple[list[np.ndarray], EngineReport]:
+        xs = list(inputs)
+        t0 = time.perf_counter()
+        outs = self.dispatcher.infer_stream(xs)
+        wall = time.perf_counter() - t0
+        report = self._report(len(xs), wall)
+        return outs, report
+
+    def shutdown(self) -> None:
+        self.dispatcher.shutdown()
+
+    def _report(self, n: int, wall: float) -> EngineReport:
+        d = self.dispatcher
+        per_node = []
+        bottleneck = 0.0
+        total_payload = 0.0
+        total_overhead = 0.0
+        total_energy = 0.0
+        for node in d.nodes:
+            tr = node.traces[-n:]
+            compute = float(np.mean([t.compute_s for t in tr]))
+            ser = float(np.mean([t.serialize_s for t in tr]))
+            des = float(np.mean([t.deserialize_s for t in tr]))
+            payload = float(np.mean([t.payload_bytes for t in tr]))
+            chunks = max(1.0, np.ceil(payload / CHUNK_BYTES))
+            wire_s = self.link.latency_s * chunks \
+                + payload / self.link.bandwidth_bytes_per_s
+            service = compute + ser + des + wire_s
+            energy = compute_energy_j(compute + ser + des, self.hw) \
+                + network_energy_j(payload, self.hw)
+            per_node.append({
+                "node": node.index, "compute_s": compute, "serialize_s": ser,
+                "deserialize_s": des, "wire_s": wire_s, "service_s": service,
+                "payload_bytes": payload, "energy_j": energy,
+            })
+            bottleneck = max(bottleneck, service)
+            total_payload += payload
+            total_overhead += ser + des
+            total_energy += energy
+        return EngineReport(
+            model=d.graph.name,
+            num_nodes=len(d.nodes),
+            codec=d.codecs.data.label,
+            samples=n,
+            wall_s=wall,
+            throughput_cps=n / wall,
+            modeled_throughput_cps=1.0 / bottleneck,
+            per_node_energy_j=total_energy / len(d.nodes),
+            overhead_s=total_overhead,
+            payload_mb=total_payload / 1e6,
+            per_node=per_node,
+        )

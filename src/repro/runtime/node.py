@@ -1,0 +1,136 @@
+"""A DEFER compute node (paper Algorithm 2), in-process.
+
+Each node owns: an incoming FIFO queue (its listening socket), a reference
+to the next node's queue (its outgoing socket), and — after the
+configuration step — a materialized model partition.  A worker thread loops
+read -> deserialize -> infer -> serialize -> relay, exactly the paper's
+THREAD-1/THREAD-2 pair collapsed into the FIFO discipline they implement.
+
+Timings are recorded per sample so the engine can report the same metrics
+the paper measures (compute, overhead, payload) from *real* execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.graph import LayerGraph, LayerNode
+from repro.runtime.wire import WireCodec, WireRecord, tree_unflatten_paths
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class SampleTrace:
+    node: int
+    deserialize_s: float
+    compute_s: float
+    serialize_s: float
+    payload_bytes: int
+
+
+class ComputeNode:
+    """One compute node in the chain."""
+
+    def __init__(self, index: int, data_codec: WireCodec, queue_depth: int = 8):
+        self.index = index
+        self.data_codec = data_codec
+        self.inbox: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self.next_inbox: queue.Queue | None = None
+        self.traces: list[SampleTrace] = []
+        self.config_records: list[WireRecord] = []
+        self._graph: LayerGraph | None = None
+        self._nodes: list[LayerNode] = []
+        self._params: dict | None = None
+        self._required: list[str] = []
+        self._exported: list[str] = []
+        self._apply = None
+        self._thread: threading.Thread | None = None
+
+    # -- configuration step (paper §III-B) ----------------------------------
+    def configure(self, graph: LayerGraph, lo: int, hi: int,
+                  arch_blob: bytes, weights_blob: bytes,
+                  weights_codec: WireCodec) -> None:
+        """Receive architecture + weights over the wire and build the model.
+
+        ``graph`` supplies only the layer *functions* (code is pre-installed
+        on nodes, as in the paper — TF/Keras is on every device); topology
+        and weights come from the wire blobs.
+        """
+        t0 = time.perf_counter()
+        import json
+        spec = json.loads(arch_blob.decode())
+        flat, dec_s = weights_codec.decode_tree(weights_blob)
+        nested = tree_unflatten_paths(flat)
+        t1 = time.perf_counter()
+        self.config_records.append(
+            WireRecord("architecture", len(arch_blob), len(arch_blob), 0.0, 0.0))
+        self.config_records.append(
+            WireRecord("weights", sum(a.nbytes for a in flat.values()),
+                       len(weights_blob), 0.0, t1 - t0))
+        self._graph = graph
+        self._nodes = graph.slice_nodes(lo, hi)
+        assert [n.name for n in self._nodes] == spec["layers"], \
+            "wire architecture disagrees with local layer code"
+        # chain semantics: inbound wire = everything crossing the cut before
+        # this stage; outbound = everything crossing the cut after (includes
+        # pass-through activations this stage merely relays)
+        self._required = graph.crossing_names(lo - 1) if lo > 0 else [""]
+        self._exported = (graph.crossing_names(hi - 1) if hi < len(graph.nodes)
+                          else [graph.nodes[-1].name])
+        self._params = {k: jax.tree_util.tree_map(jax.numpy.asarray, v)
+                        for k, v in nested.items()}
+        self._make_apply()
+
+    def _make_apply(self):
+        nodes, params = self._nodes, self._params
+        required, exported = self._required, self._exported
+
+        def apply_fn(boundary: dict[str, Any]) -> dict[str, Any]:
+            acts = dict(boundary)
+            for node in nodes:
+                args = [acts[i] for i in node.inputs]
+                acts[node.name] = node.fn(params.get(node.name, {}), *args)
+            return {n: acts[n] for n in exported}
+
+        self._apply = jax.jit(apply_fn)
+
+    # -- inference step (paper §III-C) ----------------------------------------
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self.inbox.put(_STOP)
+        if self._thread:
+            self._thread.join()
+
+    def _loop(self) -> None:
+        while True:
+            item = self.inbox.get()
+            if item is _STOP:
+                if self.next_inbox is not None:
+                    self.next_inbox.put(_STOP)
+                return
+            seq, blob = item
+            out_blob, trace = self.process(blob)
+            self.traces.append(trace)
+            if self.next_inbox is not None:
+                self.next_inbox.put((seq, out_blob))
+
+    def process(self, blob: bytes) -> tuple[bytes, SampleTrace]:
+        flat, des_s = self.data_codec.decode_tree(blob)
+        boundary = {k: jax.numpy.asarray(v) for k, v in flat.items()}
+        t0 = time.perf_counter()
+        outs = self._apply(boundary)
+        outs = {k: np.asarray(v) for k, v in outs.items()}  # block
+        t1 = time.perf_counter()
+        out_blob, rec = self.data_codec.encode_tree(outs, "data")
+        return out_blob, SampleTrace(self.index, des_s, t1 - t0,
+                                     rec.encode_s, rec.wire_bytes)

@@ -1,0 +1,113 @@
+"""The wire format between DEFER nodes: serialize -> compress -> chunk.
+
+Every payload that crosses a (simulated) socket goes through here, so byte
+counts and encode/decode timings are measured in one place.  Mirrors the
+paper: 512 kB chunking, {JSON, ZFP} serializers x {LZ4, none} compression,
+independent codec choice per payload type (architecture / weights / data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import struct
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import codecs
+
+CHUNK_BYTES = 512 * 1024
+
+
+@dataclasses.dataclass
+class WireRecord:
+    kind: str                   # "architecture" | "weights" | "data"
+    raw_bytes: int
+    wire_bytes: int
+    encode_s: float
+    decode_s: float = 0.0
+
+    @property
+    def chunks(self) -> int:
+        return max(1, -(-self.wire_bytes // CHUNK_BYTES))
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    serializer: str = "zfp"     # "json" | "zfp" | "raw"
+    compression: str = "none"   # "lz4" | "none"
+    zfp_rate: int = 24
+
+    @property
+    def label(self) -> str:
+        comp = "LZ4" if self.compression == "lz4" else "Uncompressed"
+        return f"{self.serializer.upper()}/{comp}"
+
+    # -- arrays (weights / activations) ------------------------------------
+    def encode_array(self, arr: np.ndarray) -> bytes:
+        if self.serializer == "raw":
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            blob = buf.getvalue()
+        elif self.serializer == "json":
+            blob = codecs.JsonCodec().encode(arr)
+        else:
+            blob = codecs.ZfpCodec(rate=self.zfp_rate).encode(arr)
+        if self.compression == "lz4":
+            blob = codecs.Lz4Codec().compress(blob)
+        return blob
+
+    def decode_array(self, blob: bytes) -> np.ndarray:
+        if self.compression == "lz4":
+            blob = codecs.Lz4Codec().decompress(blob)
+        if self.serializer == "raw":
+            return np.load(io.BytesIO(blob), allow_pickle=False)
+        if self.serializer == "json":
+            return codecs.JsonCodec().decode(blob)
+        return codecs.ZfpCodec(rate=self.zfp_rate).decode(blob)
+
+    # -- structured payloads (pytrees of arrays) -----------------------------
+    def encode_tree(self, tree: Any, kind: str) -> tuple[bytes, WireRecord]:
+        """Flatten a {name: array} pytree into one framed stream."""
+        import jax
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        t0 = time.perf_counter()
+        parts: list[bytes] = []
+        raw = 0
+        for path, leaf in flat:
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path).encode()
+            arr = np.asarray(leaf)
+            raw += arr.nbytes
+            body = self.encode_array(arr)
+            parts.append(struct.pack("<I", len(name)) + name
+                         + struct.pack("<Q", len(body)) + body)
+        blob = struct.pack("<I", len(parts)) + b"".join(parts)
+        t1 = time.perf_counter()
+        return blob, WireRecord(kind, raw, len(blob), t1 - t0)
+
+    def decode_tree(self, blob: bytes) -> tuple[dict, float]:
+        t0 = time.perf_counter()
+        (n,) = struct.unpack_from("<I", blob, 0)
+        off = 4
+        out: dict[str, np.ndarray] = {}
+        for _ in range(n):
+            (ln,) = struct.unpack_from("<I", blob, off); off += 4
+            name = blob[off:off + ln].decode(); off += ln
+            (lb,) = struct.unpack_from("<Q", blob, off); off += 8
+            out[name] = self.decode_array(blob[off:off + lb]); off += lb
+        return out, time.perf_counter() - t0
+
+
+def tree_unflatten_paths(flat: dict[str, np.ndarray]) -> dict:
+    """'a/b/c' path keys -> nested dicts (inverse of encode_tree's framing)."""
+    root: dict = {}
+    for path, arr in flat.items():
+        keys = path.split("/")
+        cur = root
+        for k in keys[:-1]:
+            cur = cur.setdefault(k, {})
+        cur[keys[-1]] = arr
+    return root

@@ -1,0 +1,82 @@
+"""Checkpointing: pytree -> sharded .npz files + JSON manifest, resumable.
+
+Layout:  <dir>/step_<n>/manifest.json + shard_<i>.npz.  Leaves are stored by
+their tree path; shards are capped at ``shard_bytes`` so very large models
+split across files.  Restores into the exact original tree structure and
+dtypes; ``latest_step`` enables resume.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def save(directory: str, step: int, tree: Any,
+         shard_bytes: int = 512 * 1024 * 1024) -> str:
+    out = os.path.join(directory, f"step_{step}")
+    os.makedirs(out, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest: dict[str, Any] = {"step": step, "leaves": [], "shards": 0}
+    shard: dict[str, np.ndarray] = {}
+    shard_size = 0
+    si = 0
+
+    def flush():
+        nonlocal shard, shard_size, si
+        if shard:
+            np.savez(os.path.join(out, f"shard_{si}.npz"), **shard)
+            si += 1
+            shard, shard_size = {}, 0
+
+    for path, leaf in flat:
+        name = _path_str(path)
+        arr = np.asarray(leaf)
+        if shard_size + arr.nbytes > shard_bytes and shard:
+            flush()
+        key = f"a{len(shard)}"
+        shard[key] = arr
+        manifest["leaves"].append(
+            {"path": name, "shard": si, "key": key, "dtype": str(arr.dtype),
+             "shape": list(arr.shape)})
+        shard_size += arr.nbytes
+    flush()
+    manifest["shards"] = si
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return out
+
+
+def restore(directory: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs)."""
+    src = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+    shards = {i: np.load(os.path.join(src, f"shard_{i}.npz"))
+              for i in range(manifest["shards"])}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        name = _path_str(path)
+        entry = by_path[name]
+        arr = shards[entry["shard"]][entry["key"]]
+        assert list(arr.shape) == list(leaf.shape), \
+            f"{name}: ckpt {arr.shape} vs model {leaf.shape}"
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None

@@ -1,0 +1,66 @@
+"""Training loop: jitted train_step + host loop with metrics.
+
+``make_train_step`` builds the canonical step used by launch/train.py, the
+train-shape dry-runs, and the end-to-end example: loss (next-token CE +
+router aux) -> grads -> AdamW.  Remat is applied over the unit scan inside
+the model when ``cfg.remat`` (policy: nothing saved across units — the
+standard memory/compute trade recorded in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+def make_loss_fn(cfg: ModelConfig, use_kernel: bool = False):
+    def loss_fn(params, batch):
+        return T.loss_fn(params, cfg, batch, use_kernel)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig,
+                    use_kernel: bool = False) -> Callable:
+    loss_fn = make_loss_fn(cfg, use_kernel)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, stats = apply_updates(params, grads, opt_state, opt)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, opt: OptConfig, data_iter, num_steps: int,
+          key: jax.Array | None = None, params=None, use_kernel: bool = False,
+          log_every: int = 10, callback=None):
+    """Single-host training loop (CPU smoke / examples).  Returns
+    (params, opt_state, history)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = T.init_lm(cfg, key)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt, use_kernel))
+    history = []
+    t0 = time.perf_counter()
+    for step in range(num_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(m)
+    return params, opt_state, history

@@ -1,0 +1,77 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping, on plain pytrees.
+
+Self-contained (no optax in this container); moments shard like their
+parameters (see ``sharding.opt_state_pspecs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_updates(params: Any, grads: Any, opt_state: dict, cfg: OptConfig):
+    """One AdamW step.  Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g32 * g32
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (u + decay)
+        return newp.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step + 1}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run sets 512 itself,
+# in a separate process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,155 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each instantiates the REDUCED same-family variant (2 layers, d_model<=512,
+<=4 experts) and runs one forward + one train step on CPU, asserting output
+shapes and no NaNs; decode consistency is covered for one arch per family.
+"""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config, get_smoke
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.num_prefix_embeds and not cfg.encoder_layers:
+        batch["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_prefix_embeds, cfg.d_model)) * 0.05
+    if cfg.encoder_layers:
+        batch["encoder_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_prefix_embeds, cfg.d_model)) * 0.05
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = T.init_lm(cfg, KEY)
+    batch = _batch(cfg)
+    B, S = batch["tokens"].shape
+
+    logits, aux = T.forward(params, cfg, batch["tokens"],
+                            batch.get("prefix_embeds"),
+                            batch.get("encoder_embeds"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    # one train step
+    opt = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = init_opt_state(params)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: T.loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    new_params, state, stats = apply_updates(params, grads, state, opt)
+    assert bool(jnp.isfinite(stats["grad_norm"]))
+    # params actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_count_analytic_matches_built(arch):
+    cfg = get_smoke(arch)
+    params = T.init_lm(cfg, KEY)
+    assert T.param_count(params) == cfg.param_count()
+
+
+@pytest.mark.parametrize("arch,expect_b", [
+    ("phi3-mini-3.8b", 3.8), ("starcoder2-3b", 3.0), ("gemma3-4b", 4.3),
+    ("granite-34b", 34), ("dbrx-132b", 132), ("mamba2-2.7b", 2.7),
+    ("zamba2-2.7b", 2.7), ("pixtral-12b", 12),
+])
+def test_full_config_param_count_plausible(arch, expect_b):
+    n = get_config(arch).param_count() / 1e9
+    assert 0.6 * expect_b <= n <= 1.45 * expect_b, f"{arch}: {n:.2f}B"
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "gemma3-4b", "dbrx-132b",
+                                  "zamba2-2.7b", "mamba2-2.7b",
+                                  "seamless-m4t-large-v2"])
+def test_decode_matches_forward(arch):
+    """prefill + one decode_step == forward on the extended sequence."""
+    cfg = get_smoke(arch)
+    params = T.init_lm(cfg, KEY)
+    batch = _batch(cfg, B=2, S=12)
+    kw = {k: batch[k] for k in ("prefix_embeds", "encoder_embeds")
+          if k in batch}
+    lp, caches = T.prefill(params, cfg, batch["tokens"], max_len=20, **kw)
+    nt = jnp.argmax(lp, -1).astype(jnp.int32)
+    lg, _ = T.decode_step(params, cfg, nt, jnp.full((2,), 12, jnp.int32),
+                          caches)
+    ext = jnp.concatenate([batch["tokens"], nt], axis=1)
+    lf, _ = T.forward(params, cfg, ext, **kw)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lf[:, -1:]),
+                               atol=2e-4)
+
+
+def test_unroll_matches_scan():
+    cfg = get_smoke("gemma3-4b")
+    params = T.init_lm(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    a, _ = T.forward(params, cfg, tokens, unroll=False)
+    b, _ = T.forward(params, cfg, tokens, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_moe_dispatch_variants_agree():
+    """Global-view scatter dispatch == reference dense mixture when no drop."""
+    from repro.models import moe as M
+    from repro.configs.base import MoEConfig
+    spec = M.MoESpec(64, 128, True, MoEConfig(4, 2, capacity_factor=4.0))
+    p = M.init_moe(KEY, spec, jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 64)) * 0.3
+    out, aux = M.moe_block(p, spec, x)
+    # dense reference: route every token through its top-k experts directly
+    h = x.reshape(16, 64)
+    from repro.models.layers import rmsnorm
+    hn = rmsnorm(p["ln"], h.reshape(2, 8, 64)).reshape(16, 64)
+    idx, gates, _ = M._route(p, spec, hn)
+    ys = []
+    for t in range(16):
+        acc = 0
+        for j in range(2):
+            e = int(idx[t, j])
+            up = hn[t] @ p["up"][e]
+            up = jax.nn.silu(hn[t] @ p["gate"][e]) * up
+            acc += gates[t, j] * (up @ p["down"][e])
+        ys.append(acc)
+    expect = h + jnp.stack(ys)
+    np.testing.assert_allclose(np.asarray(out.reshape(16, 64)),
+                               np.asarray(expect), atol=2e-5)
+
+
+def test_sliding_window_attention_banded_equals_dense():
+    """Banded sliding-window path == dense masked attention."""
+    from repro.models import attention as A
+    s = A.AttnSpec(64, 4, 2, 16, window=32, q_chunk=16)
+    p = A.init_attn(KEY, s, jnp.float32)
+    x = jax.random.normal(KEY, (2, 64, 64)) * 0.3
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    out = A.attention(p, s, x, pos)
+    # dense reference with explicit window mask
+    s_full = A.AttnSpec(64, 4, 2, 16, window=None, q_chunk=64)
+    from repro.models.layers import rmsnorm, linear
+    h = rmsnorm(p["ln"], x)
+    q, k, v = A._project_qkv(p, s, h, pos)
+    delta = pos[:, :, None] - pos[:, None, :]
+    mask = (delta >= 0) & (delta < 32)
+    o = A._sdpa(q, k, v, mask, 1 / np.sqrt(16)).reshape(2, 64, -1)
+    expect = x + linear(p["wo"], o)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
