@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.configs.registry import ARCHS
 from repro.kernels import ops as kops
+from repro.launch.mesh import make_mesh_compat
 from repro.launch.serve import build_pipeline_lm
 from repro.models import transformer as T
 
@@ -26,8 +27,7 @@ def run(archs=("phi3-mini-3.8b", "gemma3-4b", "dbrx-132b", "mamba2-2.7b"),
         cfg = get_smoke(arch)
         full = get_config(arch)
         params = T.init_lm(cfg, jax.random.PRNGKey(0))
-        mesh = jax.make_mesh((1,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((1,), ("stage",))
         B, S, M = 4, 32, 2
         tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
                                     cfg.vocab)

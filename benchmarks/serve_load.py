@@ -1,0 +1,174 @@
+"""Closed-loop multi-client load test: async continuous-batching runtime
+vs the synchronous engine, on the same DEFER chain.
+
+N concurrent clients each send M samples closed-loop (a client admits its
+next request only after receiving the previous result).
+
+* ``sync``  — the seed's serving model: blocking submit with ONE request
+  in the chain at a time (global lock, max_batch=1).
+* ``async`` — the serving runtime: all clients admit concurrently through
+  the bounded admission queue; compute nodes batch continuously.
+
+The async engine must sustain >= 1.5x the synchronous throughput at
+>= 4 nodes and >= 8 clients (ISSUE 1 acceptance bar).
+
+    PYTHONPATH=src python benchmarks/serve_load.py --nodes 4 --clients 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import threading
+import time
+
+# Each DEFER node models a SEPARATE edge device: give XLA one intra-op
+# thread so per-node compute is serial and the chain's parallelism comes
+# from the runtime (pipelining + batching), not from one GEMM grabbing
+# every host core.  Must happen before jax initializes.
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = ("--xla_cpu_multi_thread_eigen=false "
+                               "intra_op_parallelism_threads=1")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.graph import LayerGraph
+from repro.runtime import InferenceEngine
+from repro.runtime.dispatcher import DispatcherCodecs
+from repro.runtime.wire import WireCodec
+
+D = 256
+SEQ = 64
+DEPTH = 16
+
+
+def serving_mlp(depth: int = DEPTH, d: int = D, seq: int = SEQ) -> LayerGraph:
+    """A chain deep enough that a 4+ node partition has real per-stage
+    compute (each hop is a [seq, d] x [d, d] GEMM, not a matvec), small
+    enough that CPU jit stays in seconds."""
+    g = LayerGraph("serve-mlp", jax.ShapeDtypeStruct((1, seq, d), np.float32))
+    prev = ""
+    for i in range(depth):
+        g.layer(f"fc{i}",
+                lambda p, x: jnp.tanh(x @ p["w"]),
+                {"w": jax.ShapeDtypeStruct((d, d), np.float32)},
+                (prev,),
+                jax.ShapeDtypeStruct((1, seq, d), np.float32),
+                flops=2.0 * seq * d * d)
+        prev = f"fc{i}"
+    return g
+
+
+def sample(i: int) -> np.ndarray:
+    rng = np.random.default_rng(i)
+    return rng.normal(size=(1, SEQ, D)).astype(np.float32)
+
+
+RAW = DispatcherCodecs(data=WireCodec("raw", "none"),
+                       weights=WireCodec("raw", "none"))
+
+
+def build_engine(g: LayerGraph, params, nodes: int, max_batch: int,
+                 clients: int) -> InferenceEngine:
+    eng = InferenceEngine(g, nodes, RAW, max_batch=max_batch,
+                          admission_depth=max(16, 4 * clients))
+    eng.configure(params)
+    eng.start()
+    return eng
+
+
+def warmup(eng: InferenceEngine, clients: int,
+           serialize: bool = False) -> None:
+    """Run the same closed-loop pattern untimed so every batch-size jit
+    specialization the load will hit is compiled before the clock starts."""
+    for burst in (1, 2, clients):
+        futs = [eng.submit(sample(10_000 + i), client_id=i)
+                for i in range(burst)]
+        for f in futs:
+            f.result()
+    run_load(eng, clients, 4, serialize=serialize)
+    eng.dispatcher.drain()
+
+
+def run_load(eng: InferenceEngine, clients: int, samples: int,
+             serialize: bool = False) -> float:
+    """Closed-loop: each client thread awaits result i before sending i+1.
+    ``serialize`` emulates the synchronous engine (one in flight, ever)."""
+    lock = threading.Lock() if serialize else None
+    barrier = threading.Barrier(clients + 1)
+
+    def client(c: int) -> None:
+        barrier.wait()
+        for i in range(samples):
+            x = sample(1000 * c + i)
+            if lock is not None:
+                with lock:
+                    eng.submit(x, client_id=c).result()
+            else:
+                eng.submit(x, client_id=c).result()
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run(nodes: int = 4, clients: int = 8, samples: int = 16) -> list[dict]:
+    g = serving_mlp()
+    params = g.init(jax.random.PRNGKey(0))
+    rows = []
+    reports = {}
+    for mode, max_batch, serialize in (("sync", 1, True),
+                                       ("async", 8, False)):
+        eng = build_engine(g, params, nodes, max_batch, clients)
+        warmup(eng, clients, serialize=serialize)
+        eng.reset_window()
+        wall = run_load(eng, clients, samples, serialize=serialize)
+        rep = eng.report(samples=clients * samples, wall_s=wall)
+        eng.shutdown()
+        reports[mode] = rep
+        rows.append({
+            "mode": mode, "nodes": nodes, "clients": clients,
+            "samples": clients * samples, "wall_s": wall,
+            "throughput_rps": rep.throughput_cps,
+            "p50_ms": rep.p50_latency_s * 1e3,
+            "p99_ms": rep.p99_latency_s * 1e3,
+            "util_mean": float(np.mean([pn["utilization"]
+                                        for pn in rep.per_node])),
+            "batch_mean": float(np.mean([pn["batch_mean"]
+                                         for pn in rep.per_node])),
+        })
+    speedup = rows[1]["throughput_rps"] / rows[0]["throughput_rps"]
+    for r in rows:
+        r["speedup_vs_sync"] = (1.0 if r["mode"] == "sync" else speedup)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=16)
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="exit nonzero if async/sync < this")
+    args = ap.parse_args()
+    rows = run(args.nodes, args.clients, args.samples)
+    emit("serve_load", rows)
+    speedup = rows[1]["speedup_vs_sync"]
+    print(f"async/sync speedup: {speedup:.2f}x "
+          f"({rows[1]['throughput_rps']:.1f} vs "
+          f"{rows[0]['throughput_rps']:.1f} req/s)")
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"speedup {speedup:.2f}x < required {args.min_speedup}x")
+
+
+if __name__ == "__main__":
+    main()

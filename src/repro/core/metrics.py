@@ -54,6 +54,26 @@ def network_energy_j(payload_bytes: float, hw: HardwareProfile) -> float:
 
 
 @dataclasses.dataclass
+class LatencySummary:
+    """Request-latency distribution over a serving window."""
+
+    count: int
+    mean_s: float
+    p50_s: float
+    p99_s: float
+
+    @staticmethod
+    def from_values(values) -> "LatencySummary":
+        import numpy as np
+        if not len(values):
+            return LatencySummary(0, 0.0, 0.0, 0.0)
+        a = np.asarray(values, dtype=float)
+        return LatencySummary(int(a.size), float(a.mean()),
+                              float(np.percentile(a, 50)),
+                              float(np.percentile(a, 99)))
+
+
+@dataclasses.dataclass
 class RooflineTerms:
     """The three per-step roofline terms (seconds), per the assignment."""
 

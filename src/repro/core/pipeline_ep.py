@@ -44,7 +44,8 @@ def ep_unit_fn(cfg: ModelConfig, expert_axis: str = "expert",
     scale = 1.0 / np.sqrt(cfg.head_dim)
 
     def apply_layer(lp, x):
-        ax = jax.lax.axis_size(expert_axis)
+        from repro.sharding import axis_size
+        ax = axis_size(expert_axis)
         mb, S, d = x.shape
         pos = jnp.broadcast_to(jnp.arange(S)[None], (mb, S))
         # -- attention, heads sharded over the expert axis ---------------

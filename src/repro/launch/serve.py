@@ -26,7 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.configs.registry import ARCHS, get_config, get_smoke
 from repro.core.pipeline import PipelineConfig, make_pipeline, stack_stages
 from repro.kernels import ops as kops
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_mesh_compat
 from repro.models import layers as L
 from repro.models import transformer as T
 
@@ -240,8 +240,7 @@ def main() -> None:
         raise SystemExit(f"need >= {args.stages} devices "
                          f"(run under XLA_FLAGS=--xla_force_host_platform_"
                          f"device_count={args.stages})")
-    mesh = jax.make_mesh((args.stages,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((args.stages,), ("stage",))
     params = T.init_lm(cfg, jax.random.PRNGKey(0))
     lm = build_pipeline_lm(cfg, params, mesh, args.stages, args.microbatches,
                            compress=args.compress)

@@ -92,11 +92,24 @@ def _init_unit(key, cfg: ModelConfig, dtype, encoder: bool = False) -> dict:
             for i in range(u)}
 
 
+def _pad_rows(table: jax.Array, rows: int) -> jax.Array:
+    """Zero-pad dim 0 to ``rows``.  Pad rows MUST be zero (not random):
+    tied-embedding logits are x @ table.T, so a nonzero pad row would bleed
+    into real-id logits' gradient and break unpadded-model equivalence; the
+    real rows are drawn from the SAME rng stream as the unpadded init."""
+    if table.shape[0] == rows:
+        return table
+    pad = jnp.zeros((rows - table.shape[0],) + table.shape[1:], table.dtype)
+    return jnp.concatenate([table, pad], axis=0)
+
+
 def init_lm(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
     ks = jax.random.split(key, 8)
     n_units, rem = _unit_count(cfg)
+    embed = L.init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype)
+    embed["table"] = _pad_rows(embed["table"], cfg.padded_vocab)
     params: dict[str, Any] = {
-        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "embed": embed,
         "units": jax.vmap(lambda k: _init_unit(k, cfg, dtype))(
             jax.random.split(ks[1], n_units)),
         "final_ln": L.init_rmsnorm(cfg.d_model, dtype),
@@ -117,8 +130,9 @@ def init_lm(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32) -> dict:
             lambda k: _init_unit(k, cfg, dtype, encoder=True))(
             jax.random.split(ks[5], cfg.encoder_layers))
     if not cfg.tie_embeddings:
-        params["unembed"] = L.init_linear(ks[6], cfg.d_model,
-                                          cfg.padded_vocab, dtype)
+        unembed = L.init_linear(ks[6], cfg.d_model, cfg.vocab, dtype)
+        unembed["w"] = _pad_rows(unembed["w"].T, cfg.padded_vocab).T
+        params["unembed"] = unembed
     return params
 
 

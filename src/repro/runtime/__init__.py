@@ -1,1 +1,4 @@
-from repro.runtime.engine import InferenceEngine  # noqa: F401
+from repro.runtime.dispatcher import (AdmissionFull,  # noqa: F401
+                                      Dispatcher, DispatcherCodecs)
+from repro.runtime.engine import EngineReport, InferenceEngine  # noqa: F401
+from repro.runtime.wire import Envelope, WireCodec, WireRecord  # noqa: F401

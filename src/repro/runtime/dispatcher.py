@@ -1,8 +1,11 @@
-"""The DEFER dispatcher (paper Algorithm 1), in-process.
+"""The DEFER dispatcher (paper Algorithm 1), in-process, async.
 
 Partitions the model, ships architecture + weights to each compute node
-(configuration step), then streams inference data into the head of the
-chain and collects FIFO results from the tail (distributed inference step).
+(configuration step), then serves a *multi-client* inference stream: a
+bounded admission queue applies backpressure at the front door, a pump
+thread feeds the head of the chain, compute nodes continuously batch, and
+a collector thread demuxes tail results back to per-request futures —
+FIFO per client (the batching chain may legally reorder across clients).
 """
 from __future__ import annotations
 
@@ -11,14 +14,20 @@ import json
 import queue
 import threading
 import time
+from collections import defaultdict
+from concurrent.futures import Future
 from typing import Any, Iterable
 
 import numpy as np
 
 from repro.core.graph import LayerGraph
 from repro.core.partitioner import LinkModel, Partition, partition
-from repro.runtime.node import ComputeNode
-from repro.runtime.wire import WireCodec, WireRecord
+from repro.runtime.node import _STOP, ComputeNode
+from repro.runtime.wire import Envelope, WireCodec, WireRecord
+
+
+class AdmissionFull(Exception):
+    """The bounded admission queue is full (backpressure reached the client)."""
 
 
 @dataclasses.dataclass
@@ -31,24 +40,45 @@ class DispatcherCodecs:
 
 
 class Dispatcher:
-    """Owns the chain: planning, configuration, and the inference stream."""
+    """Owns the chain: planning, configuration, and the admission stream."""
 
     def __init__(self, graph: LayerGraph, num_nodes: int,
                  codecs: DispatcherCodecs | None = None,
                  strategy: str = "equal_layers",
-                 link: LinkModel | None = None):
+                 link: LinkModel | None = None,
+                 max_batch: int = 8,
+                 admission_depth: int = 64,
+                 queue_depth: int = 8):
         self.graph = graph
         self.codecs = codecs or DispatcherCodecs()
         self.partition: Partition = partition(
             graph, num_nodes, strategy=strategy, link=link)
         self.nodes: list[ComputeNode] = [
-            ComputeNode(i, self.codecs.data) for i in range(num_nodes)]
+            ComputeNode(i, self.codecs.data, queue_depth=queue_depth,
+                        max_batch=max_batch) for i in range(num_nodes)]
         self.config_records: list[WireRecord] = []
         self.result_queue: queue.Queue = queue.Queue()
         for i in range(num_nodes - 1):
             self.nodes[i].next_inbox = self.nodes[i + 1].inbox
         self.nodes[-1].next_inbox = self.result_queue
+
+        self.admission: queue.Queue = queue.Queue(maxsize=admission_depth)
+        # windowed stats (cleared by reset_stats): dispatcher-side encode
+        # records and admission->result latencies
+        self.feed_records: list[WireRecord] = []
+        self.latencies: list[float] = []
+        self._futures: dict[int, Future] = {}
+        self._next_id = 0
+        self._client_seq: dict[Any, int] = defaultdict(int)
+        self._inflight = 0
+        self._admitting = 0        # registered but not yet on the admission q
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._pump_thread: threading.Thread | None = None
+        self._collect_thread: threading.Thread | None = None
         self._configured = False
+        self._started = False
+        self._closed = False
 
     # -- configuration step --------------------------------------------------
     def configure(self, params: dict[str, Any]) -> None:
@@ -77,36 +107,151 @@ class Dispatcher:
                            self.codecs.weights)
         self._configured = True
 
-    # -- distributed inference step ----------------------------------------------
+    # -- distributed inference step -------------------------------------------
     def start(self) -> None:
         assert self._configured, "configure() before start()"
+        if self._started:
+            return
+        self._started = True
         for node in self.nodes:
             node.start()
+        self._pump_thread = threading.Thread(target=self._pump, daemon=True)
+        self._pump_thread.start()
+        self._collect_thread = threading.Thread(target=self._collect,
+                                                daemon=True)
+        self._collect_thread.start()
 
-    def infer_stream(self, inputs: Iterable[np.ndarray]) -> list[np.ndarray]:
-        """Feed samples FIFO into the chain; block for all results, in order."""
-        self.start()
-        n = 0
-        feed_records = []
-        for x in inputs:
-            blob, rec = self.codecs.data.encode_tree({"": np.asarray(x)}, "data")
-            feed_records.append(rec)
-            self.nodes[0].inbox.put((n, blob))
-            n += 1
-        outputs: dict[int, np.ndarray] = {}
-        order = []
-        for _ in range(n):
-            seq, blob = self.result_queue.get()
-            flat, _ = self.codecs.data.decode_tree(blob)
-            (out,) = flat.values()
-            outputs[seq] = out
-            order.append(seq)
-        self.feed_records = feed_records
-        assert order == sorted(order), f"FIFO order violated: {order}"
-        return [outputs[i] for i in range(n)]
+    def _pump(self) -> None:
+        """Admission queue -> head of the chain (the dispatcher's outbound
+        socket).  Keeping this off the caller thread means submit() returns
+        as soon as the request is *admitted*, not relayed."""
+        head = self.nodes[0].inbox
+        while True:
+            env = self.admission.get()
+            if env is _STOP:
+                head.put(_STOP)
+                return
+            head.put(env)
 
-    def shutdown(self) -> None:
-        self.nodes[0].stop()
-        for node in self.nodes[1:]:
+    def _collect(self) -> None:
+        """Tail of the chain -> per-request futures (FIFO per client)."""
+        while True:
+            item = self.result_queue.get()
+            if item is _STOP:
+                return
+            env = item
+            flat, _ = self.codecs.data.decode_tree(env.blob)
+            out = (next(iter(flat.values())) if len(flat) == 1
+                   else dict(flat))
+            now = time.perf_counter()
+            with self._lock:
+                fut = self._futures.pop(env.request_id)
+                self.latencies.append(now - env.t_submit)
+                self._inflight -= 1
+                self._idle.notify_all()
+            fut.set_result(out)
+
+    # -- admission --------------------------------------------------------------
+    def submit(self, x: np.ndarray, client_id: Any = 0,
+               block: bool = True, timeout: float | None = None) -> Future:
+        """Admit one request.  Returns a Future resolving to the output.
+
+        When the bounded admission queue is full, blocks (``block=True``)
+        or raises :class:`AdmissionFull` — that is the backpressure a
+        front-end needs to shed load instead of queuing unboundedly.
+        """
+        if not self._started:
+            self.start()
+        fut: Future = Future()
+        # one locked section registers the request: any submit that passed
+        # the closed check is visible to shutdown() via _admitting/_inflight,
+        # so _STOP can never overtake a registered envelope
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("dispatcher is shut down")
+            rid = self._next_id
+            self._next_id += 1
+            seq = self._client_seq[client_id]
+            self._client_seq[client_id] += 1
+            self._futures[rid] = fut
+            self._inflight += 1
+            self._admitting += 1
+        try:
+            blob, rec = self.codecs.data.encode_tree(
+                {"": np.asarray(x)}, "data", request_id=rid,
+                client_id=client_id)
+            env = Envelope(rid, client_id, seq, blob,
+                           t_submit=time.perf_counter())
+            with self._lock:
+                self.feed_records.append(rec)
+            self.admission.put(env, block=block, timeout=timeout)
+        except queue.Full:
+            with self._lock:
+                self._futures.pop(rid, None)
+                self._inflight -= 1
+                self._admitting -= 1
+                self._idle.notify_all()
+            raise AdmissionFull(
+                f"admission queue full ({self.admission.maxsize} deep)")
+        except BaseException:
+            with self._lock:
+                self._futures.pop(rid, None)
+                self._inflight -= 1
+                self._admitting -= 1
+                self._idle.notify_all()
+            raise
+        with self._lock:
+            self._admitting -= 1
+            self._idle.notify_all()
+        return fut
+
+    def infer_stream(self, inputs: Iterable[np.ndarray],
+                     client_id: Any = 0) -> list[np.ndarray]:
+        """Blocking shim over submit(): feed all samples, collect in
+        submission order (FIFO for this client by construction)."""
+        futures = [self.submit(x, client_id=client_id) for x in inputs]
+        return [f.result() for f in futures]
+
+    # -- teardown ---------------------------------------------------------------
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until no request is in flight.  True if drained."""
+        with self._idle:
+            return self._idle.wait_for(lambda: self._inflight == 0,
+                                       timeout=timeout)
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.latencies = []
+            self.feed_records = []
+        for node in self.nodes:
+            node.reset_stats()
+
+    def shutdown(self, drain: bool = True,
+                 timeout: float | None = None) -> None:
+        """Stop accepting requests; by default let in-flight ones finish.
+
+        The _STOP token trails every admitted envelope through the FIFO
+        chain, so even ``drain=False`` completes (not cancels) in-flight
+        requests — drain merely waits for the results before teardown.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if not self._started:
+            return
+        # never let _STOP overtake a request that already passed the closed
+        # check but has not reached the admission queue yet
+        with self._idle:
+            self._idle.wait_for(lambda: self._admitting == 0,
+                                timeout=timeout)
+        if drain:
+            self.drain(timeout=timeout)
+        self.admission.put(_STOP)
+        if self._pump_thread:
+            self._pump_thread.join()
+        for node in self.nodes:
             if node._thread:
                 node._thread.join()
+        if self._collect_thread:
+            self._collect_thread.join()

@@ -1,22 +1,33 @@
 """Top-level DEFER inference engine + measured metrics report.
 
 ``InferenceEngine`` is the public API the examples use: build from a layer
-graph, run a stream of inputs through the emulated chain with *real*
-compute and *real* wire codecs, and report the paper's four metrics —
-throughput, per-node energy, overhead, payload — from measured timings
-(compute, serialize) plus the link model for wire time/energy (the part
-CORE emulates in the original).
+graph, then either
+
+* ``submit(x, client_id)`` / ``stream(xs, client_id)`` — the async serving
+  path: many clients admit requests concurrently, compute nodes batch them
+  continuously, results come back as futures (FIFO per client), or
+* ``run(xs)`` — the original blocking single-stream call, now a shim over
+  submit().
+
+The report carries the paper's four metrics — throughput, per-node energy,
+overhead, payload — from measured timings plus the link model for wire
+time/energy (the part CORE emulates in the original), and the serving
+ones: per-node utilization, queue depth, batch occupancy, and p50/p99
+request latency, so the paper's ``1/max_i service_i`` law is observable
+under real multi-client load.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Iterable
+from concurrent.futures import Future
+from typing import Any, Iterable, Iterator
 
 import numpy as np
 
 from repro.core.graph import LayerGraph
-from repro.core.metrics import EDGE, HardwareProfile, compute_energy_j, network_energy_j
+from repro.core.metrics import (EDGE, HardwareProfile, LatencySummary,
+                                compute_energy_j, network_energy_j)
 from repro.core.partitioner import LinkModel
 from repro.runtime.dispatcher import Dispatcher, DispatcherCodecs
 from repro.runtime.wire import CHUNK_BYTES
@@ -34,6 +45,8 @@ class EngineReport:
     per_node_energy_j: float
     overhead_s: float                  # serialize+deserialize per cycle
     payload_mb: float                  # inter-node payload per cycle
+    p50_latency_s: float               # admission -> result, this window
+    p99_latency_s: float
     per_node: list[dict]
 
 
@@ -42,41 +55,94 @@ class InferenceEngine:
                  codecs: DispatcherCodecs | None = None,
                  strategy: str = "equal_layers",
                  hw: HardwareProfile = EDGE,
-                 link: LinkModel | None = None):
+                 link: LinkModel | None = None,
+                 max_batch: int = 8,
+                 admission_depth: int = 64,
+                 queue_depth: int = 8):
         self.graph = graph
         self.hw = hw
         self.link = link or LinkModel(bandwidth_bytes_per_s=hw.link_bw,
                                       energy_per_bit_j=hw.energy_per_bit_j)
         self.dispatcher = Dispatcher(graph, num_nodes, codecs, strategy,
-                                     self.link)
+                                     self.link, max_batch=max_batch,
+                                     admission_depth=admission_depth,
+                                     queue_depth=queue_depth)
+        self._window_t0 = time.perf_counter()
 
     def configure(self, params: dict) -> None:
         self.dispatcher.configure(params)
 
+    def start(self) -> None:
+        self.dispatcher.start()
+        self._window_t0 = time.perf_counter()
+
+    # -- async serving path ---------------------------------------------------
+    def submit(self, x: np.ndarray, client_id: Any = 0,
+               block: bool = True, timeout: float | None = None) -> Future:
+        """Admit one request; backpressure per Dispatcher.submit()."""
+        return self.dispatcher.submit(x, client_id=client_id, block=block,
+                                      timeout=timeout)
+
+    def stream(self, inputs: Iterable[np.ndarray], client_id: Any = 0,
+               timeout: float | None = None) -> Iterator[np.ndarray]:
+        """Admit a client's stream; yield results in submission order.
+
+        Admission of sample i+1 overlaps compute of sample i — the yield
+        order (this client's FIFO) is guaranteed by awaiting futures in
+        submission order, independent of cross-client batching.  With a
+        ``timeout``, admission raises :class:`AdmissionFull` instead of
+        blocking past it (load shedding).
+        """
+        pending: list[Future] = []
+        for x in inputs:
+            pending.append(self.submit(x, client_id=client_id,
+                                       timeout=timeout))
+        for fut in pending:
+            yield fut.result()
+
+    # -- blocking shim (the original API) ------------------------------------
     def run(self, inputs: Iterable[np.ndarray]) -> tuple[list[np.ndarray], EngineReport]:
         xs = list(inputs)
+        self.reset_window()
         t0 = time.perf_counter()
         outs = self.dispatcher.infer_stream(xs)
         wall = time.perf_counter() - t0
-        report = self._report(len(xs), wall)
+        report = self.report(samples=len(xs), wall_s=wall)
         return outs, report
 
-    def shutdown(self) -> None:
-        self.dispatcher.shutdown()
+    def shutdown(self, drain: bool = True,
+                 timeout: float | None = None) -> None:
+        self.dispatcher.shutdown(drain=drain, timeout=timeout)
 
-    def _report(self, n: int, wall: float) -> EngineReport:
+    # -- metrics ---------------------------------------------------------------
+    def reset_window(self) -> None:
+        """Start a fresh measurement window (stats are windowed, not
+        lifetime, so long-running servers can report per-interval)."""
+        self.dispatcher.reset_stats()
+        self._window_t0 = time.perf_counter()
+
+    def report(self, samples: int | None = None,
+               wall_s: float | None = None) -> EngineReport:
         d = self.dispatcher
+        wall = (wall_s if wall_s is not None
+                else time.perf_counter() - self._window_t0)
+        lat = LatencySummary.from_values(d.latencies)
+        n = samples if samples is not None else lat.count
         per_node = []
         bottleneck = 0.0
         total_payload = 0.0
         total_overhead = 0.0
         total_energy = 0.0
         for node in d.nodes:
-            tr = node.traces[-n:]
-            compute = float(np.mean([t.compute_s for t in tr]))
-            ser = float(np.mean([t.serialize_s for t in tr]))
-            des = float(np.mean([t.deserialize_s for t in tr]))
-            payload = float(np.mean([t.payload_bytes for t in tr]))
+            with node._stats_lock:
+                tr = list(node.traces)
+                depths = list(node.queue_depths)
+                busy = node.busy_s
+            n_req = sum(t.n for t in tr) or 1
+            compute = sum(t.compute_s for t in tr) / n_req
+            ser = sum(t.serialize_s for t in tr) / n_req
+            des = sum(t.deserialize_s for t in tr) / n_req
+            payload = sum(t.payload_bytes for t in tr) / n_req
             chunks = max(1.0, np.ceil(payload / CHUNK_BYTES))
             wire_s = self.link.latency_s * chunks \
                 + payload / self.link.bandwidth_bytes_per_s
@@ -87,6 +153,12 @@ class InferenceEngine:
                 "node": node.index, "compute_s": compute, "serialize_s": ser,
                 "deserialize_s": des, "wire_s": wire_s, "service_s": service,
                 "payload_bytes": payload, "energy_j": energy,
+                "utilization": min(1.0, busy / wall) if wall > 0 else 0.0,
+                "queue_depth_mean": (float(np.mean(depths)) if depths
+                                     else 0.0),
+                "queue_depth_max": max(depths) if depths else 0,
+                "batch_mean": (float(np.mean([t.n for t in tr])) if tr
+                               else 0.0),
             })
             bottleneck = max(bottleneck, service)
             total_payload += payload
@@ -98,10 +170,13 @@ class InferenceEngine:
             codec=d.codecs.data.label,
             samples=n,
             wall_s=wall,
-            throughput_cps=n / wall,
-            modeled_throughput_cps=1.0 / bottleneck,
+            throughput_cps=n / wall if wall > 0 else 0.0,
+            modeled_throughput_cps=(1.0 / bottleneck if bottleneck > 0
+                                    else 0.0),
             per_node_energy_j=total_energy / len(d.nodes),
             overhead_s=total_overhead,
             payload_mb=total_payload / 1e6,
+            p50_latency_s=lat.p50_s,
+            p99_latency_s=lat.p99_s,
             per_node=per_node,
         )

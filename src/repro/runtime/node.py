@@ -1,13 +1,21 @@
-"""A DEFER compute node (paper Algorithm 2), in-process.
+"""A DEFER compute node (paper Algorithm 2), in-process, with
+continuous batching.
 
 Each node owns: an incoming FIFO queue (its listening socket), a reference
 to the next node's queue (its outgoing socket), and — after the
-configuration step — a materialized model partition.  A worker thread loops
-read -> deserialize -> infer -> serialize -> relay, exactly the paper's
-THREAD-1/THREAD-2 pair collapsed into the FIFO discipline they implement.
+configuration step — a materialized model partition.  The worker thread
+loops read -> deserialize -> infer -> serialize -> relay, exactly the
+paper's THREAD-1/THREAD-2 pair collapsed into the FIFO discipline they
+implement, with one serving extension: up to ``max_batch`` queued
+envelopes are drained per step, their activations bucketed by shape and
+padded to a power-of-two batch, computed in ONE partition apply, and split
+back into per-request envelopes before the relay.  Requests of different
+shapes land in different buckets and may legally reorder; the dispatcher
+demuxes results per client, not globally.
 
-Timings are recorded per sample so the engine can report the same metrics
-the paper measures (compute, overhead, payload) from *real* execution.
+Timings are recorded per batch so the engine can report the same metrics
+the paper measures (compute, overhead, payload) plus the serving ones
+(utilization, queue depth, batch occupancy) from *real* execution.
 """
 from __future__ import annotations
 
@@ -15,35 +23,54 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np
 
 from repro.core.graph import LayerGraph, LayerNode
-from repro.runtime.wire import WireCodec, WireRecord, tree_unflatten_paths
+from repro.runtime.wire import (Envelope, WireCodec, WireRecord,
+                                tree_unflatten_paths)
 
 _STOP = object()
 
 
 @dataclasses.dataclass
-class SampleTrace:
+class BatchTrace:
+    """Timings for one drained batch (n requests computed together)."""
+
     node: int
-    deserialize_s: float
-    compute_s: float
-    serialize_s: float
-    payload_bytes: int
+    n: int                       # requests in the batch
+    padded: int                  # rows actually computed (after padding)
+    deserialize_s: float         # summed over the batch's requests
+    compute_s: float             # one apply over the stacked batch
+    serialize_s: float           # summed over the batch's requests
+    payload_bytes: int           # summed outbound wire bytes
+
+
+def _bucket_rows(n: int) -> int:
+    """Next power of two >= n: bounds jit specializations per signature."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class ComputeNode:
     """One compute node in the chain."""
 
-    def __init__(self, index: int, data_codec: WireCodec, queue_depth: int = 8):
+    def __init__(self, index: int, data_codec: WireCodec,
+                 queue_depth: int = 8, max_batch: int = 8,
+                 pad_batches: bool = True):
         self.index = index
         self.data_codec = data_codec
+        self.max_batch = max(1, max_batch)
+        self.pad_batches = pad_batches
         self.inbox: queue.Queue = queue.Queue(maxsize=queue_depth)
         self.next_inbox: queue.Queue | None = None
-        self.traces: list[SampleTrace] = []
+        self.traces: list[BatchTrace] = []
+        self.queue_depths: list[int] = []
+        self.busy_s: float = 0.0
         self.config_records: list[WireRecord] = []
         self._graph: LayerGraph | None = None
         self._nodes: list[LayerNode] = []
@@ -52,6 +79,7 @@ class ComputeNode:
         self._exported: list[str] = []
         self._apply = None
         self._thread: threading.Thread | None = None
+        self._stats_lock = threading.Lock()
 
     # -- configuration step (paper §III-B) ----------------------------------
     def configure(self, graph: LayerGraph, lo: int, hi: int,
@@ -90,7 +118,7 @@ class ComputeNode:
 
     def _make_apply(self):
         nodes, params = self._nodes, self._params
-        required, exported = self._required, self._exported
+        exported = self._exported
 
         def apply_fn(boundary: dict[str, Any]) -> dict[str, Any]:
             acts = dict(boundary)
@@ -103,6 +131,8 @@ class ComputeNode:
 
     # -- inference step (paper §III-C) ----------------------------------------
     def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
 
@@ -111,6 +141,12 @@ class ComputeNode:
         if self._thread:
             self._thread.join()
 
+    def reset_stats(self) -> None:
+        with self._stats_lock:
+            self.traces = []
+            self.queue_depths = []
+            self.busy_s = 0.0
+
     def _loop(self) -> None:
         while True:
             item = self.inbox.get()
@@ -118,19 +154,90 @@ class ComputeNode:
                 if self.next_inbox is not None:
                     self.next_inbox.put(_STOP)
                 return
-            seq, blob = item
-            out_blob, trace = self.process(blob)
-            self.traces.append(trace)
+            # continuous batching: drain whatever is already queued, up to
+            # max_batch, without waiting for more arrivals
+            batch = [item]
+            saw_stop = False
+            while len(batch) < self.max_batch:
+                try:
+                    nxt = self.inbox.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    saw_stop = True
+                    break
+                batch.append(nxt)
+            with self._stats_lock:
+                self.queue_depths.append(len(batch) + self.inbox.qsize())
+            t0 = time.perf_counter()
+            outs = self.process_batch(batch)
+            with self._stats_lock:
+                self.busy_s += time.perf_counter() - t0
             if self.next_inbox is not None:
-                self.next_inbox.put((seq, out_blob))
+                for env in outs:
+                    self.next_inbox.put(env)
+            if saw_stop:
+                if self.next_inbox is not None:
+                    self.next_inbox.put(_STOP)
+                return
 
-    def process(self, blob: bytes) -> tuple[bytes, SampleTrace]:
-        flat, des_s = self.data_codec.decode_tree(blob)
-        boundary = {k: jax.numpy.asarray(v) for k, v in flat.items()}
-        t0 = time.perf_counter()
-        outs = self._apply(boundary)
-        outs = {k: np.asarray(v) for k, v in outs.items()}  # block
-        t1 = time.perf_counter()
-        out_blob, rec = self.data_codec.encode_tree(outs, "data")
-        return out_blob, SampleTrace(self.index, des_s, t1 - t0,
-                                     rec.encode_s, rec.wire_bytes)
+    # -- batched partition apply ---------------------------------------------
+    def process_batch(self, envs: list[Envelope]) -> list[Envelope]:
+        """Decode, bucket-by-shape, pad, compute once, split, re-encode."""
+        des_total = 0.0
+        samples: list[tuple[Envelope, dict[str, np.ndarray]]] = []
+        for env in envs:
+            flat, des_s = self.data_codec.decode_tree(env.blob)
+            des_total += des_s
+            samples.append((env, {k: np.asarray(v) for k, v in flat.items()}))
+
+        # bucket by activation signature: only identically-shaped requests
+        # can share a stacked apply
+        buckets: dict[tuple, list[tuple[Envelope, dict]]] = {}
+        for env, boundary in samples:
+            sig = tuple(sorted((k, v.shape, str(v.dtype))
+                               for k, v in boundary.items()))
+            buckets.setdefault(sig, []).append((env, boundary))
+
+        out_envs: list[Envelope] = []
+        compute_total = 0.0
+        ser_total = 0.0
+        payload_total = 0
+        padded_rows = 0
+        for group in buckets.values():
+            rows = [next(iter(b.values())).shape[0] for _, b in group]
+            total = sum(rows)
+            target = _bucket_rows(total) if self.pad_batches else total
+            padded_rows += target
+
+            stacked: dict[str, jax.Array] = {}
+            for key in group[0][1]:
+                arrs = [b[key] for _, b in group]
+                cat = np.concatenate(arrs, axis=0) if len(arrs) > 1 else arrs[0]
+                if target > total:
+                    pad = np.zeros((target - total,) + cat.shape[1:],
+                                   cat.dtype)
+                    cat = np.concatenate([cat, pad], axis=0)
+                stacked[key] = jax.numpy.asarray(cat)
+
+            t0 = time.perf_counter()
+            outs = self._apply(stacked)
+            outs = {k: np.asarray(v) for k, v in outs.items()}  # block
+            compute_total += time.perf_counter() - t0
+
+            off = 0
+            for (env, _), b_rows in zip(group, rows):
+                piece = {k: v[off:off + b_rows] for k, v in outs.items()}
+                off += b_rows
+                blob, rec = self.data_codec.encode_tree(
+                    piece, "data", request_id=env.request_id,
+                    client_id=env.client_id)
+                ser_total += rec.encode_s
+                payload_total += rec.wire_bytes
+                out_envs.append(dataclasses.replace(env, blob=blob))
+
+        with self._stats_lock:
+            self.traces.append(BatchTrace(
+                self.index, len(envs), padded_rows, des_total, compute_total,
+                ser_total, payload_total))
+        return out_envs

@@ -28,10 +28,33 @@ class WireRecord:
     wire_bytes: int
     encode_s: float
     decode_s: float = 0.0
+    # request routing (None for config-step payloads): lets per-payload
+    # metrics be correlated back to the admission stream
+    request_id: int | None = None
+    client_id: int | None = None
 
     @property
     def chunks(self) -> int:
         return max(1, -(-self.wire_bytes // CHUNK_BYTES))
+
+
+@dataclasses.dataclass
+class Envelope:
+    """One in-flight request's payload between chain hops.
+
+    ``request_id`` is globally unique (admission order) and is what the
+    collector demuxes results by.  Continuous batching may legally reorder
+    requests of *different* clients across bucket boundaries; a client's
+    own results still come back FIFO because ``stream()`` awaits futures
+    in submission order.  ``(client_id, seq)`` records that per-client
+    order on the wire for tracing.
+    """
+
+    request_id: int
+    client_id: int
+    seq: int                    # submission index within client
+    blob: bytes
+    t_submit: float = 0.0       # admission timestamp (perf_counter)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,7 +92,9 @@ class WireCodec:
         return codecs.ZfpCodec(rate=self.zfp_rate).decode(blob)
 
     # -- structured payloads (pytrees of arrays) -----------------------------
-    def encode_tree(self, tree: Any, kind: str) -> tuple[bytes, WireRecord]:
+    def encode_tree(self, tree: Any, kind: str,
+                    request_id: int | None = None,
+                    client_id: int | None = None) -> tuple[bytes, WireRecord]:
         """Flatten a {name: array} pytree into one framed stream."""
         import jax
         flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -86,7 +111,8 @@ class WireCodec:
                          + struct.pack("<Q", len(body)) + body)
         blob = struct.pack("<I", len(parts)) + b"".join(parts)
         t1 = time.perf_counter()
-        return blob, WireRecord(kind, raw, len(blob), t1 - t0)
+        return blob, WireRecord(kind, raw, len(blob), t1 - t0,
+                                request_id=request_id, client_id=client_id)
 
     def decode_tree(self, blob: bytes) -> tuple[dict, float]:
         t0 = time.perf_counter()

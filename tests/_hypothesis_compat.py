@@ -1,0 +1,125 @@
+"""Fallback for `hypothesis` in network-less images.
+
+The property tests in this repo only use a small strategy vocabulary
+(`binary`, `integers`, `floats`, `lists`, `tuples`).  When the real
+library is unavailable, this shim degrades each ``@given`` property test
+into an example test over a deterministic set of draws: the boundary
+values (all-min, all-max) plus a handful of seeded random examples.  Far
+weaker than hypothesis (no shrinking, no coverage-guided search), but the
+invariants still get exercised instead of the module erroring at import.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+import types
+
+N_EXAMPLES = 10
+_SEED = 0x5EED
+
+
+class _Strategy:
+    """A deterministic value source: draw(rng, edge) -> value.
+
+    ``edge`` is 0 for the all-minimum example, 1 for the all-maximum one,
+    and None for seeded random draws.
+    """
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random, edge=None):
+        return self._draw(rng, edge)
+
+
+def _size(rng, edge, lo, hi):
+    if edge == 0:
+        return lo
+    if edge == 1:
+        return hi
+    return rng.randint(lo, hi)
+
+
+def binary(min_size: int = 0, max_size: int = 64) -> _Strategy:
+    def draw(rng, edge):
+        n = _size(rng, edge, min_size, max_size)
+        if edge == 0:
+            return b"\x00" * n
+        if edge == 1:
+            return bytes(rng.getrandbits(8) for _ in range(n))
+        # mix compressible runs with noise so LZ4 sees both regimes
+        if rng.random() < 0.5:
+            unit = bytes(rng.getrandbits(8) for _ in range(max(1, n // 16) or 1))
+            return (unit * (n // max(1, len(unit)) + 1))[:n]
+        return bytes(rng.getrandbits(8) for _ in range(n))
+    return _Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def draw(rng, edge):
+        if edge == 0:
+            return min_value
+        if edge == 1:
+            return max_value
+        return rng.randint(min_value, max_value)
+    return _Strategy(draw)
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    def draw(rng, edge):
+        if edge == 0:
+            return min_value
+        if edge == 1:
+            return max_value
+        return rng.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng, edge):
+        n = _size(rng, edge, min_size, max_size)
+        return [elements.draw(rng, None) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    def draw(rng, edge):
+        return tuple(e.draw(rng, edge) for e in elements)
+    return _Strategy(draw)
+
+
+st = types.SimpleNamespace(binary=binary, integers=integers, floats=floats,
+                           lists=lists, tuples=tuples)
+
+
+def settings(**_kw):
+    """Accepted and ignored (example count here is fixed and small)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        def runner(*fixture_args, **fixture_kw):
+            for i in range(N_EXAMPLES):
+                edge = i if i < 2 else None
+                rng = random.Random(_SEED + i)
+                args = [s.draw(rng, edge) for s in strategies]
+                fn(*fixture_args, *args, **fixture_kw)
+        # NOTE: no functools.wraps — pytest follows __wrapped__ when
+        # introspecting the signature and would mistake the property
+        # arguments for fixtures.
+        runner.__name__ = fn.__name__
+        runner.__module__ = fn.__module__
+        runner.__doc__ = fn.__doc__
+        runner.hypothesis_fallback = True
+        return runner
+    return deco
