@@ -1,22 +1,31 @@
-"""Closed-loop multi-client load test: async continuous-batching runtime
-vs the synchronous engine, on the same DEFER chain.
+"""Closed-loop multi-client load test: staged codec/compute-overlap runtime
+vs the PR 1 baseline and the synchronous engine, on the same DEFER chain.
 
 N concurrent clients each send M samples closed-loop (a client admits its
 next request only after receiving the previous result).
 
-* ``sync``  — the seed's serving model: blocking submit with ONE request
-  in the chain at a time (global lock, max_batch=1).
-* ``async`` — the serving runtime: all clients admit concurrently through
-  the bounded admission queue; compute nodes batch continuously.
+* ``sync``     — the seed's serving model: blocking submit with ONE request
+  in the chain at a time (global lock, max_batch=1), PR 1 codecs.
+* ``async``    — the PR 1 async runtime, faithfully: continuous batching,
+  but each node runs decode -> apply -> encode sequentially on one worker
+  thread, re-encodes every request separately (``staged=False``), and uses
+  the PR 1 codec implementations (``WireCodec(vectorized=False)``: the
+  copy-per-axis ZFP lift and the byte-at-a-time Python LZ4).
+* ``staged``   — this PR's runtime: 3-stage per-node pipeline (ingress /
+  compute / egress threads) overlapping codec with compute, batch-level
+  wire encoding (one codec pass per bucket with row-extent framing in the
+  envelope), and the vectorized codec hot paths.
 
-The async engine must sustain >= 1.5x the synchronous throughput at
->= 4 nodes and >= 8 clients (ISSUE 1 acceptance bar).
+Acceptance bars: async >= 1.5x sync (ISSUE 1, raw codec), and staged >=
+1.5x async with a zfp or q8 data codec at >= 4 nodes x 8 clients (ISSUE 2).
 
-    PYTHONPATH=src python benchmarks/serve_load.py --nodes 4 --clients 8
+    PYTHONPATH=src python benchmarks/serve_load.py --nodes 4 --clients 8 \
+        --codec zfp --min-staged-speedup 1.5
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import threading
 import time
@@ -30,6 +39,12 @@ if "XLA_FLAGS" not in os.environ:
                                "intra_op_parallelism_threads=1")
 
 import jax
+
+# execute jitted computations on the calling (per-node) thread instead of
+# funneling every node's apply through the CPU client's single dispatch
+# stream — the chain's node parallelism is real, as on separate devices
+jax.config.update("jax_cpu_enable_async_dispatch", False)
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,6 +57,13 @@ from repro.runtime.wire import WireCodec
 D = 256
 SEQ = 64
 DEPTH = 16
+
+CODECS = {
+    "raw": WireCodec("raw", "none"),
+    "zfp": WireCodec("zfp", "none", zfp_rate=16),
+    "zfp_lz4": WireCodec("zfp", "lz4", zfp_rate=16),
+    "q8": WireCodec("q8", "none"),
+}
 
 
 def serving_mlp(depth: int = DEPTH, d: int = D, seq: int = SEQ) -> LayerGraph:
@@ -66,15 +88,16 @@ def sample(i: int) -> np.ndarray:
     return rng.normal(size=(1, SEQ, D)).astype(np.float32)
 
 
-RAW = DispatcherCodecs(data=WireCodec("raw", "none"),
-                       weights=WireCodec("raw", "none"))
-
-
 def build_engine(g: LayerGraph, params, nodes: int, max_batch: int,
-                 clients: int) -> InferenceEngine:
-    eng = InferenceEngine(g, nodes, RAW, max_batch=max_batch,
-                          admission_depth=max(16, 4 * clients))
+                 clients: int, codec: WireCodec,
+                 staged: bool) -> InferenceEngine:
+    eng = InferenceEngine(
+        g, nodes,
+        DispatcherCodecs(data=codec, weights=WireCodec("raw", "none")),
+        max_batch=max_batch, admission_depth=max(16, 4 * clients),
+        staged=staged)
     eng.configure(params)
+    eng.precompile()
     eng.start()
     return eng
 
@@ -120,34 +143,63 @@ def run_load(eng: InferenceEngine, clients: int, samples: int,
     return time.perf_counter() - t0
 
 
-def run(nodes: int = 4, clients: int = 8, samples: int = 16) -> list[dict]:
+MODES = (
+    # (mode, max_batch multiplier?, serialize clients, staged)
+    ("sync", 1, True, False),
+    ("async", 8, False, False),
+    ("staged", 8, False, True),
+)
+
+
+def run(nodes: int = 4, clients: int = 8, samples: int = 16,
+        codec: str = "zfp", repeats: int = 2) -> list[dict]:
     g = serving_mlp()
     params = g.init(jax.random.PRNGKey(0))
+    wire = CODECS[codec]
+    # the PR 1 modes run the PR 1 codec implementations; `staged` runs the
+    # vectorized hot paths (both sides of the A/B are the code they claim)
+    wire_pr1 = dataclasses.replace(wire, vectorized=False)
     rows = []
-    reports = {}
-    for mode, max_batch, serialize in (("sync", 1, True),
-                                       ("async", 8, False)):
-        eng = build_engine(g, params, nodes, max_batch, clients)
+    for mode, max_batch, serialize, staged in MODES:
+        eng = build_engine(g, params, nodes, max_batch, clients,
+                           wire if staged else wire_pr1, staged)
         warmup(eng, clients, serialize=serialize)
-        eng.reset_window()
-        wall = run_load(eng, clients, samples, serialize=serialize)
-        rep = eng.report(samples=clients * samples, wall_s=wall)
+        # repeat the measured window and keep the fastest: scheduler jitter
+        # on an oversubscribed box only ever *adds* time, so min-wall is
+        # the lowest-noise estimator of each mode's real service rate
+        best = None
+        for _ in range(max(1, repeats)):
+            eng.reset_window()
+            wall = run_load(eng, clients, samples, serialize=serialize)
+            rep = eng.report(samples=clients * samples, wall_s=wall)
+            if best is None or wall < best[0]:
+                best = (wall, rep)
+        wall, rep = best
         eng.shutdown()
-        reports[mode] = rep
         rows.append({
-            "mode": mode, "nodes": nodes, "clients": clients,
-            "samples": clients * samples, "wall_s": wall,
+            "mode": mode, "codec": rep.codec, "nodes": nodes,
+            "clients": clients, "samples": clients * samples,
+            "wall_s": wall,
             "throughput_rps": rep.throughput_cps,
             "p50_ms": rep.p50_latency_s * 1e3,
             "p99_ms": rep.p99_latency_s * 1e3,
-            "util_mean": float(np.mean([pn["utilization"]
-                                        for pn in rep.per_node])),
+            "util_compute": float(np.mean([pn["util_compute"]
+                                           for pn in rep.per_node])),
+            "util_decode": float(np.mean([pn["util_decode"]
+                                          for pn in rep.per_node])),
+            "util_encode": float(np.mean([pn["util_encode"]
+                                          for pn in rep.per_node])),
             "batch_mean": float(np.mean([pn["batch_mean"]
                                          for pn in rep.per_node])),
+            "encodes_per_batch": float(np.mean([pn["encodes_per_batch"]
+                                                for pn in rep.per_node])),
         })
-    speedup = rows[1]["throughput_rps"] / rows[0]["throughput_rps"]
+    by_mode = {r["mode"]: r for r in rows}
     for r in rows:
-        r["speedup_vs_sync"] = (1.0 if r["mode"] == "sync" else speedup)
+        r["speedup_vs_sync"] = (r["throughput_rps"]
+                                / by_mode["sync"]["throughput_rps"])
+        r["speedup_vs_async"] = (r["throughput_rps"]
+                                 / by_mode["async"]["throughput_rps"])
     return rows
 
 
@@ -156,18 +208,33 @@ def main() -> None:
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--samples", type=int, default=16)
+    ap.add_argument("--codec", choices=sorted(CODECS), default="zfp")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="measured windows per mode; fastest is reported")
     ap.add_argument("--min-speedup", type=float, default=0.0,
-                    help="exit nonzero if async/sync < this")
+                    help="exit nonzero if async/sync < this (ISSUE 1 bar)")
+    ap.add_argument("--min-staged-speedup", type=float, default=0.0,
+                    help="exit nonzero if staged/async < this (ISSUE 2 bar)")
     args = ap.parse_args()
-    rows = run(args.nodes, args.clients, args.samples)
+    rows = run(args.nodes, args.clients, args.samples, args.codec,
+               args.repeats)
     emit("serve_load", rows)
-    speedup = rows[1]["speedup_vs_sync"]
-    print(f"async/sync speedup: {speedup:.2f}x "
-          f"({rows[1]['throughput_rps']:.1f} vs "
-          f"{rows[0]['throughput_rps']:.1f} req/s)")
-    if args.min_speedup and speedup < args.min_speedup:
+    by_mode = {r["mode"]: r for r in rows}
+    s_async = by_mode["async"]["speedup_vs_sync"]
+    s_staged = by_mode["staged"]["speedup_vs_async"]
+    print(f"async/sync speedup:   {s_async:.2f}x "
+          f"({by_mode['async']['throughput_rps']:.1f} vs "
+          f"{by_mode['sync']['throughput_rps']:.1f} req/s)")
+    print(f"staged/async speedup: {s_staged:.2f}x "
+          f"({by_mode['staged']['throughput_rps']:.1f} vs "
+          f"{by_mode['async']['throughput_rps']:.1f} req/s, "
+          f"codec {by_mode['staged']['codec']})")
+    if args.min_speedup and s_async < args.min_speedup:
         raise SystemExit(
-            f"speedup {speedup:.2f}x < required {args.min_speedup}x")
+            f"async speedup {s_async:.2f}x < required {args.min_speedup}x")
+    if args.min_staged_speedup and s_staged < args.min_staged_speedup:
+        raise SystemExit(f"staged speedup {s_staged:.2f}x < "
+                         f"required {args.min_staged_speedup}x")
 
 
 if __name__ == "__main__":

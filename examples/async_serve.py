@@ -63,7 +63,9 @@ print(f"\n{report.samples} requests over {NODES} nodes: "
       f"p50 {report.p50_latency_s*1e3:.0f} ms, "
       f"p99 {report.p99_latency_s*1e3:.0f} ms")
 for pn in report.per_node:
-    print(f"  node {pn['node']}: util {pn['utilization']*100:4.1f}%  "
+    print(f"  node {pn['node']}: "
+          f"util dec/cmp/enc {pn['util_decode']*100:4.1f}/"
+          f"{pn['util_compute']*100:4.1f}/{pn['util_encode']*100:4.1f}%  "
           f"mean batch {pn['batch_mean']:.2f}  "
           f"queue depth max {pn['queue_depth_max']}  "
           f"service {pn['service_s']*1e3:.2f} ms")

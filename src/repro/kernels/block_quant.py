@@ -17,6 +17,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 TILE_R, TILE_C = 8, 128
@@ -100,3 +101,71 @@ def dequantize_blocks(q: jax.Array, scales: jax.Array, dtype=jnp.float32,
         out_shape=jax.ShapeDtypeStruct((R, C), dtype),
         interpret=interpret,
     )(q, scales)
+
+
+# -- host-facing wire entry points (the serving runtime's "q8" serializer) ---
+#
+# The kernels above want an aligned 2D [R, C] grid; the wire sees arbitrary
+# activation pytree leaves.  These wrappers flatten, zero-pad to a whole
+# number of (8, 128) tiles, and run the kernel natively on TPU or in
+# interpret mode everywhere else (same numerics, still one jitted call).
+
+WIRE_C = TILE_C
+
+
+def _wire_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pow2_tiles(n: int) -> int:
+    """Whole (8, 128) tiles covering n values, rounded up to a power of two
+    so the jit cache sees a bounded set of [R, 128] shapes regardless of
+    ragged batch sizes (one specialization per doubling, not per size)."""
+    tiles = -(-n // (TILE_R * WIRE_C))
+    p = 1
+    while p < tiles:
+        p *= 2
+    return p
+
+
+def quantize_wire(arr: np.ndarray,
+                  interpret: bool | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Arbitrary-shape array -> (int8 payload [Np], float32 scales [Np/1024]).
+
+    ``Np`` is ``arr.size`` zero-padded up to a power-of-two count of
+    (8, 128) tiles; the caller records the true element count and may trim
+    the int8 payload to it (zero input quantizes to zero, so the padding is
+    reconstructible on decode).
+    """
+    a = np.ascontiguousarray(arr, dtype=np.float32).ravel()
+    n = a.size
+    if n == 0:
+        return np.zeros(0, np.int8), np.zeros(0, np.float32)
+    np_full = _pow2_tiles(n) * TILE_R * WIRE_C
+    if np_full > n:
+        a = np.concatenate([a, np.zeros(np_full - n, np.float32)])
+    x = a.reshape(-1, WIRE_C)
+    q, s = quantize_blocks(jnp.asarray(x),
+                           interpret=_wire_interpret(interpret))
+    return np.asarray(q).ravel(), np.asarray(s, np.float32).ravel()
+
+
+def dequantize_wire(q: np.ndarray, scales: np.ndarray, n: int,
+                    shape: tuple[int, ...], dtype,
+                    interpret: bool | None = None) -> np.ndarray:
+    """Invert :func:`quantize_wire` back to ``shape``/``dtype``.  Accepts an
+    int8 payload trimmed to ``n`` — the tail tiles quantized from zero
+    padding are re-synthesized as zeros."""
+    if n == 0:
+        return np.zeros(shape, dtype)
+    np_full = scales.size * TILE_R * TILE_C    # one scale per (8, 128) tile
+    qf = np.zeros(np_full, np.int8)
+    qf[:q.size] = q
+    q2 = qf.reshape(-1, WIRE_C)
+    s2 = np.ascontiguousarray(scales, dtype=np.float32).reshape(
+        -1, WIRE_C // TILE_C)
+    out = dequantize_blocks(jnp.asarray(q2), jnp.asarray(s2),
+                            interpret=_wire_interpret(interpret))
+    return np.asarray(out).ravel()[:n].reshape(shape).astype(dtype, copy=False)

@@ -1,4 +1,5 @@
 from repro.runtime.dispatcher import (AdmissionFull,  # noqa: F401
-                                      Dispatcher, DispatcherCodecs)
+                                      Dispatcher, DispatcherCodecs, NodeError)
 from repro.runtime.engine import EngineReport, InferenceEngine  # noqa: F401
-from repro.runtime.wire import Envelope, WireCodec, WireRecord  # noqa: F401
+from repro.runtime.wire import (BatchEnvelope, Envelope,  # noqa: F401
+                                RowExtent, WireCodec, WireRecord)

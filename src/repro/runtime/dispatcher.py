@@ -3,9 +3,13 @@
 Partitions the model, ships architecture + weights to each compute node
 (configuration step), then serves a *multi-client* inference stream: a
 bounded admission queue applies backpressure at the front door, a pump
-thread feeds the head of the chain, compute nodes continuously batch, and
-a collector thread demuxes tail results back to per-request futures —
-FIFO per client (the batching chain may legally reorder across clients).
+thread feeds the head of the chain, compute nodes continuously batch (and
+relay whole batches as single :class:`BatchEnvelope` payloads), and a
+collector thread decodes each tail envelope ONCE, slices per-request rows
+back out, and resolves the per-request futures — FIFO per client (the
+batching chain may legally reorder across clients).  A batch that failed
+inside a node arrives as an ``error`` envelope; the collector fails exactly
+those futures with :class:`NodeError` while the chain keeps serving.
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ import json
 import queue
 import threading
 import time
+import traceback
 from collections import defaultdict
 from concurrent.futures import Future
 from typing import Any, Iterable
@@ -23,11 +28,17 @@ import numpy as np
 from repro.core.graph import LayerGraph
 from repro.core.partitioner import LinkModel, Partition, partition
 from repro.runtime.node import _STOP, ComputeNode
-from repro.runtime.wire import Envelope, WireCodec, WireRecord
+from repro.runtime.wire import (BatchEnvelope, RowExtent, WireCodec,
+                                WireRecord, slice_parts)
 
 
 class AdmissionFull(Exception):
     """The bounded admission queue is full (backpressure reached the client)."""
+
+
+class NodeError(RuntimeError):
+    """A request's batch failed inside a compute node; carries the remote
+    traceback.  The node survives and keeps serving other requests."""
 
 
 @dataclasses.dataclass
@@ -48,14 +59,16 @@ class Dispatcher:
                  link: LinkModel | None = None,
                  max_batch: int = 8,
                  admission_depth: int = 64,
-                 queue_depth: int = 8):
+                 queue_depth: int = 8,
+                 staged: bool = True):
         self.graph = graph
         self.codecs = codecs or DispatcherCodecs()
         self.partition: Partition = partition(
             graph, num_nodes, strategy=strategy, link=link)
         self.nodes: list[ComputeNode] = [
             ComputeNode(i, self.codecs.data, queue_depth=queue_depth,
-                        max_batch=max_batch) for i in range(num_nodes)]
+                        max_batch=max_batch, staged=staged)
+            for i in range(num_nodes)]
         self.config_records: list[WireRecord] = []
         self.result_queue: queue.Queue = queue.Queue()
         for i in range(num_nodes - 1):
@@ -107,6 +120,13 @@ class Dispatcher:
                            self.codecs.weights)
         self._configured = True
 
+    def precompile(self) -> None:
+        """Compile every batch-size specialization on every node up front
+        (see :meth:`ComputeNode.precompile`)."""
+        assert self._configured, "configure() before precompile()"
+        for node in self.nodes:
+            node.precompile()
+
     # -- distributed inference step -------------------------------------------
     def start(self) -> None:
         assert self._configured, "configure() before start()"
@@ -134,22 +154,54 @@ class Dispatcher:
             head.put(env)
 
     def _collect(self) -> None:
-        """Tail of the chain -> per-request futures (FIFO per client)."""
+        """Tail of the chain -> per-request futures (FIFO per client).
+
+        One decode per tail envelope; per-request rows are sliced back out
+        of the stacked payload by the envelope's row-extent framing."""
         while True:
             item = self.result_queue.get()
             if item is _STOP:
                 return
-            env = item
-            flat, _ = self.codecs.data.decode_tree(env.blob)
-            out = (next(iter(flat.values())) if len(flat) == 1
-                   else dict(flat))
-            now = time.perf_counter()
-            with self._lock:
-                fut = self._futures.pop(env.request_id)
-                self.latencies.append(now - env.t_submit)
+            env: BatchEnvelope = item
+            if env.error is not None:
+                self._finish_batch(env.extents, error=env.error)
+                continue
+            try:
+                flat, _ = self.codecs.data.decode_tree(env.blob)
+                flat = {k: np.asarray(v) for k, v in flat.items()}
+                parts = slice_parts(flat, env.extents)
+            except Exception:               # codec failure at the tail
+                self._finish_batch(env.extents, error=traceback.format_exc())
+                continue
+            results = [(next(iter(p.values())) if len(p) == 1 else p)
+                       for p in parts]
+            self._finish_batch(env.extents, results=results)
+
+    def _finish_batch(self, extents: list[RowExtent],
+                      results: list | None = None,
+                      error: str | None = None) -> None:
+        now = time.perf_counter()
+        done: list[tuple[Future, Any]] = []
+        with self._lock:
+            for idx, ext in enumerate(extents):
+                fut = self._futures.pop(ext.request_id, None)
+                if fut is None:
+                    continue
+                if error is None:
+                    # failures resolve fast by construction — mixing their
+                    # time-to-failure into the percentiles would *improve*
+                    # reported latency as the error rate rises
+                    self.latencies.append(now - ext.t_submit)
                 self._inflight -= 1
-                self._idle.notify_all()
-            fut.set_result(out)
+                done.append((fut, results[idx] if results is not None
+                             else None))
+            self._idle.notify_all()
+        for fut, res in done:
+            if error is not None:
+                fut.set_exception(NodeError(
+                    f"request failed inside the chain:\n{error}"))
+            else:
+                fut.set_result(res)
 
     # -- admission --------------------------------------------------------------
     def submit(self, x: np.ndarray, client_id: Any = 0,
@@ -177,11 +229,13 @@ class Dispatcher:
             self._inflight += 1
             self._admitting += 1
         try:
+            arr = np.asarray(x)
             blob, rec = self.codecs.data.encode_tree(
-                {"": np.asarray(x)}, "data", request_id=rid,
-                client_id=client_id)
-            env = Envelope(rid, client_id, seq, blob,
-                           t_submit=time.perf_counter())
+                {"": arr}, "data", request_id=rid, client_id=client_id)
+            rows = int(arr.shape[0]) if arr.ndim else 1
+            env = BatchEnvelope(
+                [RowExtent(rid, client_id, seq, rows,
+                           t_submit=time.perf_counter())], blob)
             with self._lock:
                 self.feed_records.append(rec)
             self.admission.put(env, block=block, timeout=timeout)
@@ -251,7 +305,6 @@ class Dispatcher:
         if self._pump_thread:
             self._pump_thread.join()
         for node in self.nodes:
-            if node._thread:
-                node._thread.join()
+            node.join()
         if self._collect_thread:
             self._collect_thread.join()

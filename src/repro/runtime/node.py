@@ -1,21 +1,38 @@
-"""A DEFER compute node (paper Algorithm 2), in-process, with
-continuous batching.
+"""A DEFER compute node (paper Algorithm 2) as a 3-stage internal pipeline.
 
 Each node owns: an incoming FIFO queue (its listening socket), a reference
 to the next node's queue (its outgoing socket), and — after the
-configuration step — a materialized model partition.  The worker thread
-loops read -> deserialize -> infer -> serialize -> relay, exactly the
-paper's THREAD-1/THREAD-2 pair collapsed into the FIFO discipline they
-implement, with one serving extension: up to ``max_batch`` queued
-envelopes are drained per step, their activations bucketed by shape and
-padded to a power-of-two batch, computed in ONE partition apply, and split
-back into per-request envelopes before the relay.  Requests of different
-shapes land in different buckets and may legally reorder; the dispatcher
-demuxes results per client, not globally.
+configuration step — a materialized model partition.  The paper's
+THREAD-1/THREAD-2 pair is generalized into three stages connected by
+depth-2 bounded queues (double buffering), so codec work overlaps compute:
 
-Timings are recorded per batch so the engine can report the same metrics
-the paper measures (compute, overhead, payload) plus the serving ones
-(utilization, queue depth, batch occupancy) from *real* execution.
+    inbox -> [ingress: decode]
+          -> _to_compute -> [compute: merge/bucket/stack/apply]
+          -> _to_encode  -> [egress: encode ONCE per bucket, relay]
+          -> next node's inbox
+
+While batch N runs the jitted partition apply, batch N+1 is deserializing
+on the ingress thread and batch N-1 is serializing on the egress thread.
+Continuous batching happens at the compute stage: up to ``max_batch``
+requests' worth of decoded payloads are merged per step, bucketed by
+activation signature (trailing dims + dtype — row counts may be ragged),
+concatenated, padded to a power-of-two row count, and computed in ONE
+partition apply.  The egress stage then encodes each bucket's stacked
+output ONCE — batch-level wire encoding with row-extent framing in the
+:class:`BatchEnvelope` — instead of one codec pass per request, so fixed
+codec cost amortizes across the batch and the next hop decodes once.
+
+Failure isolation: an exception in any stage's decode/apply/encode is
+caught per batch; the affected requests' extents travel on as an ``error``
+envelope (formatted traceback) that downstream stages relay untouched, the
+collector fails exactly those futures, and the node keeps serving
+subsequent batches.
+
+Timings are recorded per batch (``BatchTrace``) and per stage
+(``busy_decode_s`` / ``busy_compute_s`` / ``busy_encode_s``), so the engine
+can report the paper's metrics (compute, overhead, payload) plus the
+serving ones (per-stage utilization, queue depth, batch occupancy) from
+*real* execution — and so the codec/compute overlap is directly measurable.
 """
 from __future__ import annotations
 
@@ -23,29 +40,48 @@ import dataclasses
 import queue
 import threading
 import time
+import traceback
 from typing import Any
 
 import jax
 import numpy as np
 
 from repro.core.graph import LayerGraph, LayerNode
-from repro.runtime.wire import (Envelope, WireCodec, WireRecord,
-                                tree_unflatten_paths)
+from repro.runtime.wire import (BatchEnvelope, RowExtent, WireCodec,
+                                WireRecord, slice_parts, tree_unflatten_paths)
 
 _STOP = object()
 
 
 @dataclasses.dataclass
 class BatchTrace:
-    """Timings for one drained batch (n requests computed together)."""
+    """Timings for one merged batch (n requests computed together)."""
 
     node: int
     n: int                       # requests in the batch
     padded: int                  # rows actually computed (after padding)
-    deserialize_s: float         # summed over the batch's requests
-    compute_s: float             # one apply over the stacked batch
-    serialize_s: float           # summed over the batch's requests
+    deserialize_s: float         # summed over the batch's inbound envelopes
+    compute_s: float             # apply over the stacked buckets
+    serialize_s: float           # summed over the batch's outbound encodes
     payload_bytes: int           # summed outbound wire bytes
+    encodes: int = 0             # outbound codec passes (== buckets, not n)
+
+
+@dataclasses.dataclass
+class _Decoded:
+    """Ingress -> compute: one inbound envelope, decoded once."""
+
+    extents: list[RowExtent]
+    boundary: dict[str, np.ndarray]      # stacked over the envelope's extents
+    deserialize_s: float
+
+
+@dataclasses.dataclass
+class _Computed:
+    """Compute -> egress: one merged batch's bucket outputs + its trace."""
+
+    buckets: list[tuple[list[RowExtent], dict[str, np.ndarray]]]
+    trace: BatchTrace
 
 
 def _bucket_rows(n: int) -> int:
@@ -56,21 +92,39 @@ def _bucket_rows(n: int) -> int:
     return p
 
 
+def _signature(boundary: dict[str, np.ndarray]) -> tuple:
+    """Bucket key: leaf names + trailing dims + dtypes.  Row counts are
+    free to differ — ragged requests concatenate along axis 0."""
+    return tuple(sorted((k, v.shape[1:], str(v.dtype))
+                        for k, v in boundary.items()))
+
+
 class ComputeNode:
     """One compute node in the chain."""
 
     def __init__(self, index: int, data_codec: WireCodec,
                  queue_depth: int = 8, max_batch: int = 8,
-                 pad_batches: bool = True):
+                 pad_batches: bool = True, staged: bool = True,
+                 stage_depth: int = 2, coalesce_s: float = 0.005):
         self.index = index
         self.data_codec = data_codec
         self.max_batch = max(1, max_batch)
         self.pad_batches = pad_batches
+        self.staged = staged
+        self.coalesce_s = coalesce_s
         self.inbox: queue.Queue = queue.Queue(maxsize=queue_depth)
         self.next_inbox: queue.Queue | None = None
+        self._to_compute: queue.Queue = queue.Queue(maxsize=max(1, stage_depth))
+        self._to_encode: queue.Queue = queue.Queue(maxsize=max(1, stage_depth))
+        # an item popped for a wave/merge that would overflow max_batch is
+        # stashed here and leads the next wave (queues can't push back)
+        self._ingress_pending = None
+        self._compute_pending = None
         self.traces: list[BatchTrace] = []
         self.queue_depths: list[int] = []
-        self.busy_s: float = 0.0
+        self.busy_decode_s: float = 0.0
+        self.busy_compute_s: float = 0.0
+        self.busy_encode_s: float = 0.0
         self.config_records: list[WireRecord] = []
         self._graph: LayerGraph | None = None
         self._nodes: list[LayerNode] = []
@@ -78,8 +132,14 @@ class ComputeNode:
         self._required: list[str] = []
         self._exported: list[str] = []
         self._apply = None
-        self._thread: threading.Thread | None = None
+        self._threads: list[threading.Thread] = []
         self._stats_lock = threading.Lock()
+
+    @property
+    def busy_s(self) -> float:
+        """Total busy time summed over stages (can exceed wall time when
+        stages overlap — report per-stage utilization, not this / wall)."""
+        return self.busy_decode_s + self.busy_compute_s + self.busy_encode_s
 
     # -- configuration step (paper §III-B) ----------------------------------
     def configure(self, graph: LayerGraph, lo: int, hi: int,
@@ -129,36 +189,314 @@ class ComputeNode:
 
         self._apply = jax.jit(apply_fn)
 
+    def precompile(self) -> None:
+        """Trace/compile every power-of-two padded batch specialization this
+        node can hit under continuous batching — the stacked apply AND the
+        data codec's own jit (q8's Pallas shapes) — so serving never pays a
+        compile inside a measurement window.
+
+        Serving pads bucket totals with ``_bucket_rows`` (pow2 over the
+        summed rows), so the traced shapes are ``_bucket_rows(r * base)``
+        for every request count r up to max_batch — not r-fold tilings,
+        which would miss the padded shapes whenever ``base`` is not itself
+        a power of two."""
+        if self._apply is None or self._graph is None:
+            return
+        base: dict[str, np.ndarray] = {}
+        for name in self._required:
+            spec = (self._graph.input_spec if name == ""
+                    else self._graph[name].out_spec)
+            base[name] = np.zeros(spec.shape, np.dtype(spec.dtype))
+        base_rows = next(iter(base.values())).shape[0]
+        seen: set[int] = set()
+        r = 1
+        while r <= self.max_batch:
+            target = (_bucket_rows(r * base_rows) if self.pad_batches
+                      else r * base_rows)
+            r *= 2
+            if target in seen:
+                continue
+            seen.add(target)
+            reps = -(-target // base_rows)
+            boundary = {k: jax.numpy.asarray(
+                np.concatenate([v] * reps, axis=0)[:target] if reps > 1
+                else v[:target])
+                for k, v in base.items()}
+            outs = self._apply(boundary)
+            outs = {k: np.asarray(v) for k, v in outs.items()}
+            blob, _ = self.data_codec.encode_tree(outs, "data")
+            self.data_codec.decode_tree(blob)
+
     # -- inference step (paper §III-C) ----------------------------------------
     def start(self) -> None:
-        if self._thread is not None and self._thread.is_alive():
+        if any(t.is_alive() for t in self._threads):
             return
-        self._thread = threading.Thread(target=self._loop, daemon=True)
-        self._thread.start()
+        if self.staged:
+            self._threads = [
+                threading.Thread(target=self._ingress_loop, daemon=True),
+                threading.Thread(target=self._compute_loop, daemon=True),
+                threading.Thread(target=self._egress_loop, daemon=True),
+            ]
+        else:
+            self._threads = [
+                threading.Thread(target=self._legacy_loop, daemon=True)]
+        for t in self._threads:
+            t.start()
 
     def stop(self) -> None:
         self.inbox.put(_STOP)
-        if self._thread:
-            self._thread.join()
+        self.join()
+
+    def join(self) -> None:
+        for t in self._threads:
+            t.join()
 
     def reset_stats(self) -> None:
         with self._stats_lock:
             self.traces = []
             self.queue_depths = []
-            self.busy_s = 0.0
+            self.busy_decode_s = 0.0
+            self.busy_compute_s = 0.0
+            self.busy_encode_s = 0.0
 
-    def _loop(self) -> None:
+    # -- stage 1: ingress (decode) --------------------------------------------
+    def _ingress_loop(self) -> None:
+        """Drain whatever is already queued (up to max_batch requests),
+        decode each envelope once, and hand the whole wave to the compute
+        stage — batches form *before* the slow decode, exactly where the
+        backlog accumulates, so one wave becomes one apply and one encode."""
+        while True:
+            env = self._ingress_pending
+            self._ingress_pending = None
+            if env is None:
+                env = self.inbox.get()
+            if env is _STOP:
+                self._to_compute.put(_STOP)
+                return
+            wave = [env]
+            n_parts = env.n if env.error is None else 0
+            saw_stop = False
+            deadline = None
+            while n_parts < self.max_batch:
+                try:
+                    nxt = self.inbox.get_nowait()
+                except queue.Empty:
+                    # downstream still chewing on the previous wave: a
+                    # bounded coalescing window grows this wave instead of
+                    # queueing a tiny one behind it (bigger waves = fewer
+                    # codec passes; compute is busy so latency cost ~ 0)
+                    if self._to_compute.qsize() == 0:
+                        break
+                    now = time.perf_counter()
+                    if deadline is None:
+                        deadline = now + self.coalesce_s
+                    if now >= deadline:
+                        break
+                    try:
+                        nxt = self.inbox.get(timeout=deadline - now)
+                    except queue.Empty:
+                        continue
+                if nxt is _STOP:
+                    saw_stop = True
+                    break
+                if nxt.error is None and n_parts + nxt.n > self.max_batch:
+                    # would overflow the batch contract (and the pow2
+                    # specializations precompile() traced): next wave's
+                    self._ingress_pending = nxt
+                    break
+                wave.append(nxt)
+                if nxt.error is None:
+                    n_parts += nxt.n
+            # book only codec time as decode busy — the queue puts below can
+            # block on backpressure, which is waiting, not stage work
+            des_busy = 0.0
+            decoded: list[_Decoded] = []
+            relay: list[BatchEnvelope] = []
+            for env in wave:
+                if env.error is not None:       # relay failures untouched
+                    relay.append(env)
+                    continue
+                t1 = time.perf_counter()
+                try:
+                    flat, _ = self.data_codec.decode_tree(env.blob)
+                    dt = time.perf_counter() - t1
+                    decoded.append(_Decoded(
+                        env.extents,
+                        {k: np.asarray(v) for k, v in flat.items()}, dt))
+                except Exception:
+                    dt = time.perf_counter() - t1
+                    relay.append(BatchEnvelope(
+                        env.extents, b"", error=traceback.format_exc()))
+                des_busy += dt
+            with self._stats_lock:
+                self.busy_decode_s += des_busy
+            for env in relay:
+                self._to_compute.put(env)
+            if decoded:
+                self._to_compute.put(decoded)
+            if saw_stop:
+                self._to_compute.put(_STOP)
+                return
+
+    # -- stage 2: compute (merge, bucket, stack, apply) -----------------------
+    def _compute_loop(self) -> None:
+        while True:
+            item = self._compute_pending
+            self._compute_pending = None
+            if item is None:
+                item = self._to_compute.get()
+            if item is _STOP:
+                self._to_encode.put(_STOP)
+                return
+            if isinstance(item, BatchEnvelope):  # error passthrough
+                self._to_encode.put(item)
+                continue
+            # continuous batching, second chance: merge any further decoded
+            # waves, up to max_batch requests, without waiting for arrivals
+            group = list(item)
+            n_parts = sum(len(d.extents) for d in group)
+            saw_stop = False
+            while n_parts < self.max_batch:
+                try:
+                    nxt = self._to_compute.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    saw_stop = True
+                    break
+                if isinstance(nxt, BatchEnvelope):
+                    self._to_encode.put(nxt)
+                    continue
+                add = sum(len(d.extents) for d in nxt)
+                if n_parts + add > self.max_batch:
+                    self._compute_pending = nxt     # next merge's
+                    break
+                group.extend(nxt)
+                n_parts += add
+            with self._stats_lock:
+                self.queue_depths.append(n_parts + self.inbox.qsize()
+                                         + self._to_compute.qsize())
+            t0 = time.perf_counter()
+            out, failures = self._compute_group(group)
+            with self._stats_lock:
+                self.busy_compute_s += time.perf_counter() - t0
+            for env in failures:
+                self._to_encode.put(env)
+            if out is not None:
+                self._to_encode.put(out)
+            if saw_stop:
+                self._to_encode.put(_STOP)
+                return
+
+    def _stack_apply(self, segments: list[dict[str, np.ndarray]],
+                     total: int, target: int) -> tuple[dict[str, np.ndarray], float]:
+        """Concatenate per-leaf segments along axis 0, zero-pad to ``target``
+        rows, run the jitted partition apply once, trim back to ``total``.
+        Shared by the staged compute stage and the legacy per-request path."""
+        stacked: dict[str, jax.Array] = {}
+        for key in segments[0]:
+            arrs = [s[key] for s in segments]
+            cat = np.concatenate(arrs, axis=0) if len(arrs) > 1 else arrs[0]
+            if target > total:
+                pad = np.zeros((target - total,) + cat.shape[1:], cat.dtype)
+                cat = np.concatenate([cat, pad], axis=0)
+            stacked[key] = jax.numpy.asarray(cat)
+        t0 = time.perf_counter()
+        res = self._apply(stacked)
+        res = {k: np.asarray(v)[:total] for k, v in res.items()}  # block
+        return res, time.perf_counter() - t0
+
+    def _compute_group(self, group: list[_Decoded]
+                       ) -> tuple[_Computed | None, list[BatchEnvelope]]:
+        """Bucket decoded segments by signature, one stacked apply each.
+
+        A bucket whose apply raises becomes an error envelope for exactly
+        its own extents; sibling buckets in the merged group still return
+        their results."""
+        n = sum(len(d.extents) for d in group)
+        des_s = sum(d.deserialize_s for d in group)
+        buckets: dict[tuple, list[_Decoded]] = {}
+        for d in group:
+            buckets.setdefault(_signature(d.boundary), []).append(d)
+
+        outs: list[tuple[list[RowExtent], dict[str, np.ndarray]]] = []
+        failures: list[BatchEnvelope] = []
+        compute_total = 0.0
+        padded_rows = 0
+        for segs in buckets.values():
+            extents = [e for d in segs for e in d.extents]
+            total = sum(next(iter(d.boundary.values())).shape[0]
+                        for d in segs)
+            target = _bucket_rows(total) if self.pad_batches else total
+            padded_rows += target
+            try:
+                res, apply_s = self._stack_apply(
+                    [d.boundary for d in segs], total, target)
+            except Exception:
+                failures.append(BatchEnvelope(extents, b"",
+                                              error=traceback.format_exc()))
+                continue
+            compute_total += apply_s
+            outs.append((extents, res))
+        if not outs:
+            return None, failures
+        trace = BatchTrace(self.index, n, padded_rows, des_s, compute_total,
+                           0.0, 0, encodes=0)
+        return _Computed(outs, trace), failures
+
+    # -- stage 3: egress (encode once per bucket, relay) ----------------------
+    def _egress_loop(self) -> None:
+        while True:
+            item = self._to_encode.get()
+            if item is _STOP:
+                if self.next_inbox is not None:
+                    self.next_inbox.put(_STOP)
+                return
+            if isinstance(item, BatchEnvelope):  # error passthrough
+                if self.next_inbox is not None:
+                    self.next_inbox.put(item)
+                continue
+            # book only codec time as encode busy; the relay puts can block
+            # on the next node's bounded inbox (backpressure, not work)
+            enc_busy = 0.0
+            out_envs: list[BatchEnvelope] = []
+            for extents, res in item.buckets:
+                t0 = time.perf_counter()
+                try:
+                    blob, rec = self.data_codec.encode_tree(
+                        res, "data", request_id=extents[0].request_id,
+                        client_id=extents[0].client_id)
+                    env = BatchEnvelope(extents, blob)
+                    item.trace.serialize_s += rec.encode_s
+                    item.trace.payload_bytes += rec.wire_bytes
+                    item.trace.encodes += 1
+                except Exception:
+                    env = BatchEnvelope(extents, b"",
+                                        error=traceback.format_exc())
+                enc_busy += time.perf_counter() - t0
+                out_envs.append(env)
+            with self._stats_lock:
+                self.busy_encode_s += enc_busy
+                self.traces.append(item.trace)
+            if self.next_inbox is not None:
+                for env in out_envs:
+                    self.next_inbox.put(env)
+
+    # -- unstaged path (the PR 1 baseline, kept for A/B benchmarks) -----------
+    def _legacy_loop(self) -> None:
+        """Single worker thread: read -> decode -> apply -> encode PER
+        REQUEST -> relay, the pre-staged hot path.  Kept so
+        ``benchmarks/serve_load.py`` can measure the staged pipeline against
+        the same-codec PR 1 baseline in one process."""
         while True:
             item = self.inbox.get()
             if item is _STOP:
                 if self.next_inbox is not None:
                     self.next_inbox.put(_STOP)
                 return
-            # continuous batching: drain whatever is already queued, up to
-            # max_batch, without waiting for more arrivals
             batch = [item]
             saw_stop = False
-            while len(batch) < self.max_batch:
+            while sum(e.n for e in batch) < self.max_batch:
                 try:
                     nxt = self.inbox.get_nowait()
                 except queue.Empty:
@@ -169,10 +507,7 @@ class ComputeNode:
                 batch.append(nxt)
             with self._stats_lock:
                 self.queue_depths.append(len(batch) + self.inbox.qsize())
-            t0 = time.perf_counter()
             outs = self.process_batch(batch)
-            with self._stats_lock:
-                self.busy_s += time.perf_counter() - t0
             if self.next_inbox is not None:
                 for env in outs:
                     self.next_inbox.put(env)
@@ -181,63 +516,74 @@ class ComputeNode:
                     self.next_inbox.put(_STOP)
                 return
 
-    # -- batched partition apply ---------------------------------------------
-    def process_batch(self, envs: list[Envelope]) -> list[Envelope]:
-        """Decode, bucket-by-shape, pad, compute once, split, re-encode."""
+    def process_batch(self, envs: list[BatchEnvelope]) -> list[BatchEnvelope]:
+        """Decode, bucket-by-shape, pad, compute once, split, re-encode each
+        request separately (per-request wire, PR 1 semantics)."""
+        passthrough = [e for e in envs if e.error is not None]
+        work = [e for e in envs if e.error is None]
         des_total = 0.0
-        samples: list[tuple[Envelope, dict[str, np.ndarray]]] = []
-        for env in envs:
-            flat, des_s = self.data_codec.decode_tree(env.blob)
-            des_total += des_s
-            samples.append((env, {k: np.asarray(v) for k, v in flat.items()}))
+        samples: list[tuple[RowExtent, dict[str, np.ndarray]]] = []
+        failed: list[BatchEnvelope] = []
+        for env in work:
+            t0 = time.perf_counter()
+            try:
+                flat, _ = self.data_codec.decode_tree(env.blob)
+                flat = {k: np.asarray(v) for k, v in flat.items()}
+            except Exception:
+                failed.append(BatchEnvelope(env.extents, b"",
+                                            error=traceback.format_exc()))
+                continue
+            des_total += time.perf_counter() - t0
+            for ext, part in zip(env.extents, slice_parts(flat, env.extents)):
+                samples.append((ext, part))
+        with self._stats_lock:
+            self.busy_decode_s += des_total
 
-        # bucket by activation signature: only identically-shaped requests
-        # can share a stacked apply
-        buckets: dict[tuple, list[tuple[Envelope, dict]]] = {}
-        for env, boundary in samples:
-            sig = tuple(sorted((k, v.shape, str(v.dtype))
-                               for k, v in boundary.items()))
-            buckets.setdefault(sig, []).append((env, boundary))
+        buckets: dict[tuple, list[tuple[RowExtent, dict]]] = {}
+        for ext, boundary in samples:
+            buckets.setdefault(_signature(boundary), []).append((ext, boundary))
 
-        out_envs: list[Envelope] = []
+        out_envs: list[BatchEnvelope] = list(passthrough) + failed
         compute_total = 0.0
         ser_total = 0.0
         payload_total = 0
         padded_rows = 0
-        for group in buckets.values():
-            rows = [next(iter(b.values())).shape[0] for _, b in group]
+        encodes = 0
+        for bucket in buckets.values():
+            rows = [next(iter(b.values())).shape[0] for _, b in bucket]
             total = sum(rows)
             target = _bucket_rows(total) if self.pad_batches else total
             padded_rows += target
-
-            stacked: dict[str, jax.Array] = {}
-            for key in group[0][1]:
-                arrs = [b[key] for _, b in group]
-                cat = np.concatenate(arrs, axis=0) if len(arrs) > 1 else arrs[0]
-                if target > total:
-                    pad = np.zeros((target - total,) + cat.shape[1:],
-                                   cat.dtype)
-                    cat = np.concatenate([cat, pad], axis=0)
-                stacked[key] = jax.numpy.asarray(cat)
-
-            t0 = time.perf_counter()
-            outs = self._apply(stacked)
-            outs = {k: np.asarray(v) for k, v in outs.items()}  # block
-            compute_total += time.perf_counter() - t0
-
+            try:
+                outs, apply_s = self._stack_apply(
+                    [b for _, b in bucket], total, target)
+                compute_total += apply_s
+            except Exception:
+                tb = traceback.format_exc()
+                out_envs.extend(BatchEnvelope([ext], b"", error=tb)
+                                for ext, _ in bucket)
+                continue
             off = 0
-            for (env, _), b_rows in zip(group, rows):
+            for (ext, _), b_rows in zip(bucket, rows):
                 piece = {k: v[off:off + b_rows] for k, v in outs.items()}
                 off += b_rows
-                blob, rec = self.data_codec.encode_tree(
-                    piece, "data", request_id=env.request_id,
-                    client_id=env.client_id)
-                ser_total += rec.encode_s
-                payload_total += rec.wire_bytes
-                out_envs.append(dataclasses.replace(env, blob=blob))
+                try:
+                    t0 = time.perf_counter()
+                    blob, rec = self.data_codec.encode_tree(
+                        piece, "data", request_id=ext.request_id,
+                        client_id=ext.client_id)
+                    ser_total += time.perf_counter() - t0
+                    payload_total += rec.wire_bytes
+                    encodes += 1
+                    out_envs.append(BatchEnvelope([ext], blob))
+                except Exception:
+                    out_envs.append(BatchEnvelope([ext], b"",
+                                                  error=traceback.format_exc()))
 
         with self._stats_lock:
+            self.busy_compute_s += compute_total
+            self.busy_encode_s += ser_total
             self.traces.append(BatchTrace(
-                self.index, len(envs), padded_rows, des_total, compute_total,
-                ser_total, payload_total))
+                self.index, len(samples), padded_rows, des_total,
+                compute_total, ser_total, payload_total, encodes=encodes))
         return out_envs

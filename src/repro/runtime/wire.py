@@ -2,8 +2,27 @@
 
 Every payload that crosses a (simulated) socket goes through here, so byte
 counts and encode/decode timings are measured in one place.  Mirrors the
-paper: 512 kB chunking, {JSON, ZFP} serializers x {LZ4, none} compression,
-independent codec choice per payload type (architecture / weights / data).
+paper: 512 kB chunking, {JSON, ZFP, Q8} serializers x {LZ4, none}
+compression, independent codec choice per payload type (architecture /
+weights / data).
+
+Since the staged-relay runtime, inter-node data payloads are **batch-level**:
+a compute node encodes the stacked output of a whole continuous batch ONCE
+and ships it as a single :class:`BatchEnvelope` whose *envelope* (not blob)
+carries per-request row extents.  One ZFP/LZ4/Q8 pass amortizes fixed codec
+cost across the batch and lets LZ4 find cross-request matches; the receiving
+node decodes once and only the tail collector slices rows back out
+(:func:`slice_parts`).  The wire blob itself is the same framed pytree
+stream as before — ``encode_tree``/``decode_tree`` — so batch payloads and
+config payloads share one format:
+
+    [u32 leaf_count] then per leaf:
+    [u32 name_len][name][u64 body_len][body = serializer(+lz4) bytes]
+
+``request_id`` is globally unique (admission order) and is what the
+collector demuxes results by; continuous batching may legally reorder
+requests of *different* clients, and a client's own results still come back
+FIFO because ``stream()`` awaits futures in submission order.
 """
 from __future__ import annotations
 
@@ -40,14 +59,10 @@ class WireRecord:
 
 @dataclasses.dataclass
 class Envelope:
-    """One in-flight request's payload between chain hops.
+    """One in-flight request's payload between chain hops (PR 1 wire).
 
-    ``request_id`` is globally unique (admission order) and is what the
-    collector demuxes results by.  Continuous batching may legally reorder
-    requests of *different* clients across bucket boundaries; a client's
-    own results still come back FIFO because ``stream()`` awaits futures
-    in submission order.  ``(client_id, seq)`` records that per-client
-    order on the wire for tracing.
+    Superseded by :class:`BatchEnvelope` inside the staged runtime; kept as
+    a public single-request view for tooling and tests.
     """
 
     request_id: int
@@ -58,15 +73,73 @@ class Envelope:
 
 
 @dataclasses.dataclass(frozen=True)
+class RowExtent:
+    """One request's slice of a batch payload: rows [offset..offset+rows)
+    along axis 0 of every leaf, where offset is the sum of preceding
+    extents' rows.  Routing metadata rides the envelope, not the blob."""
+
+    request_id: int
+    client_id: Any
+    seq: int                    # submission index within client
+    rows: int                   # this request's rows in the stacked tensor
+    t_submit: float = 0.0       # admission timestamp (perf_counter)
+
+
+@dataclasses.dataclass
+class BatchEnvelope:
+    """A whole continuous batch on the wire: ONE encoded stacked payload
+    plus per-request row-extent framing.  ``error`` carries a formatted
+    traceback instead of a payload when an upstream stage failed — the
+    envelope still flows to the tail so the collector can fail exactly the
+    affected futures while the chain keeps serving."""
+
+    extents: list[RowExtent]
+    blob: bytes
+    error: str | None = None
+
+    @property
+    def n(self) -> int:
+        return len(self.extents)
+
+    @property
+    def rows(self) -> int:
+        return sum(e.rows for e in self.extents)
+
+
+def slice_parts(flat: dict[str, np.ndarray],
+                extents: list[RowExtent]) -> list[dict[str, np.ndarray]]:
+    """Invert batch stacking: one {name: array} view per extent (no copy)."""
+    parts = []
+    off = 0
+    for e in extents:
+        parts.append({k: v[off:off + e.rows] for k, v in flat.items()})
+        off += e.rows
+    return parts
+
+
+@dataclasses.dataclass(frozen=True)
 class WireCodec:
-    serializer: str = "zfp"     # "json" | "zfp" | "raw"
+    serializer: str = "zfp"     # "json" | "zfp" | "q8" | "raw"
     compression: str = "none"   # "lz4" | "none"
     zfp_rate: int = 24
+    # vectorized=False selects the pure-Python/copying reference codec
+    # implementations (the PR 1 hot path) — kept so serve_load can measure
+    # the staged runtime against a faithful same-codec PR 1 baseline
+    vectorized: bool = True
 
     @property
     def label(self) -> str:
         comp = "LZ4" if self.compression == "lz4" else "Uncompressed"
         return f"{self.serializer.upper()}/{comp}"
+
+    def error_bound(self, absmax: float) -> float:
+        """Worst-case absolute error for one encode/decode pass over values
+        with |x| <= absmax (0.0 for the lossless serializers)."""
+        if self.serializer == "q8":
+            return codecs.Q8Codec().error_bound(absmax)
+        if self.serializer == "zfp":
+            return codecs.ZfpCodec(rate=self.zfp_rate).error_bound(absmax)
+        return 0.0
 
     # -- arrays (weights / activations) ------------------------------------
     def encode_array(self, arr: np.ndarray) -> bytes:
@@ -76,20 +149,26 @@ class WireCodec:
             blob = buf.getvalue()
         elif self.serializer == "json":
             blob = codecs.JsonCodec().encode(arr)
+        elif self.serializer == "q8":
+            blob = codecs.Q8Codec().encode(arr)
         else:
-            blob = codecs.ZfpCodec(rate=self.zfp_rate).encode(arr)
+            blob = codecs.ZfpCodec(rate=self.zfp_rate,
+                                   vectorized=self.vectorized).encode(arr)
         if self.compression == "lz4":
-            blob = codecs.Lz4Codec().compress(blob)
+            blob = codecs.Lz4Codec(vectorized=self.vectorized).compress(blob)
         return blob
 
     def decode_array(self, blob: bytes) -> np.ndarray:
         if self.compression == "lz4":
-            blob = codecs.Lz4Codec().decompress(blob)
+            blob = codecs.Lz4Codec(vectorized=self.vectorized).decompress(blob)
         if self.serializer == "raw":
             return np.load(io.BytesIO(blob), allow_pickle=False)
         if self.serializer == "json":
             return codecs.JsonCodec().decode(blob)
-        return codecs.ZfpCodec(rate=self.zfp_rate).decode(blob)
+        if self.serializer == "q8":
+            return codecs.Q8Codec().decode(blob)
+        return codecs.ZfpCodec(rate=self.zfp_rate,
+                               vectorized=self.vectorized).decode(blob)
 
     # -- structured payloads (pytrees of arrays) -----------------------------
     def encode_tree(self, tree: Any, kind: str,

@@ -1,0 +1,119 @@
+"""Batch-level wire format + q8 serializer: row-extent framing round trips
+(ragged and single-request), q8 error bound through encode_tree, and the
+full dispatcher -> chain -> collector path on CPU interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codecs
+from repro.runtime import InferenceEngine
+from repro.runtime.dispatcher import DispatcherCodecs
+from repro.runtime.wire import BatchEnvelope, RowExtent, WireCodec, slice_parts
+
+RNG = np.random.default_rng(7)
+
+
+def _extents(rows):
+    return [RowExtent(request_id=i, client_id=i % 2, seq=i, rows=r)
+            for i, r in enumerate(rows)]
+
+
+@pytest.mark.parametrize("rows", [[1], [3], [1, 1, 1], [2, 5, 1, 4]])
+@pytest.mark.parametrize("serializer", ["raw", "zfp", "q8"])
+def test_batch_framing_roundtrip(rows, serializer):
+    """Stack ragged per-request trees, encode ONCE, decode, slice by the
+    envelope's row extents: every request gets back exactly its rows."""
+    codec = WireCodec(serializer, "none", zfp_rate=20)
+    parts = [{"a": RNG.normal(size=(r, 6, 4)).astype(np.float32),
+              "b": RNG.normal(size=(r, 3)).astype(np.float32)}
+             for r in rows]
+    stacked = {k: np.concatenate([p[k] for p in parts], axis=0)
+               for k in parts[0]}
+    blob, rec = codec.encode_tree(stacked, "data")
+    env = BatchEnvelope(_extents(rows), blob)
+    assert env.n == len(rows) and env.rows == sum(rows)
+    flat, _ = codec.decode_tree(env.blob)
+    back = slice_parts({k: np.asarray(v) for k, v in flat.items()},
+                       env.extents)
+    assert len(back) == len(parts)
+    bound = codec.error_bound(
+        float(max(np.abs(stacked[k]).max() for k in stacked)))
+    for orig, got in zip(parts, back):
+        for k in orig:
+            assert got[k].shape == orig[k].shape
+            if serializer == "raw":
+                np.testing.assert_array_equal(got[k], orig[k])
+            else:
+                assert np.abs(got[k] - orig[k]).max() <= bound
+
+
+def test_batch_framing_is_one_encode_pass():
+    """Encoding the stacked batch must cost ONE codec pass whose payload is
+    smaller than the sum of per-request passes (amortized framing)."""
+    codec = WireCodec("zfp", "lz4", zfp_rate=16)
+    parts = [{"x": RNG.normal(size=(1, 64, 32)).astype(np.float32)}
+             for _ in range(8)]
+    stacked = {"x": np.concatenate([p["x"] for p in parts], axis=0)}
+    one, rec_one = codec.encode_tree(stacked, "data")
+    per = [codec.encode_tree(p, "data")[0] for p in parts]
+    assert len(one) <= sum(len(b) for b in per)
+
+
+@pytest.mark.parametrize("shape", [(5,), (1, 64, 256), (33, 100), (8, 128)])
+def test_q8_codec_roundtrip_error_bound(shape):
+    q8 = codecs.Q8Codec()
+    arr = (RNG.normal(size=shape) * 10).astype(np.float32)
+    back = q8.decode(q8.encode(arr))
+    assert back.shape == arr.shape and back.dtype == arr.dtype
+    assert np.abs(back - arr).max() <= q8.error_bound(
+        float(np.abs(arr).max()))
+
+
+def test_q8_wire_codec_tree_roundtrip():
+    codec = WireCodec("q8", "lz4")
+    tree = {"h": RNG.normal(size=(4, 32, 16)).astype(np.float32)}
+    blob, rec = codec.encode_tree(tree, "data")
+    assert rec.wire_bytes < tree["h"].nbytes        # ~4x + scales + lz4
+    flat, _ = codec.decode_tree(blob)
+    bound = codec.error_bound(float(np.abs(tree["h"]).max()))
+    assert np.abs(np.asarray(flat["h"]) - tree["h"]).max() <= bound
+
+
+def _mlp(depth=4, d=16):
+    from repro.core.graph import LayerGraph
+    g = LayerGraph("q8-mlp", jax.ShapeDtypeStruct((1, d), np.float32))
+    prev = ""
+    for i in range(depth):
+        g.layer(f"fc{i}",
+                lambda p, x: jnp.tanh(x @ p["w"]),
+                {"w": jax.ShapeDtypeStruct((d, d), np.float32)},
+                (prev,),
+                jax.ShapeDtypeStruct((1, d), np.float32),
+                flops=2.0 * d * d)
+        prev = f"fc{i}"
+    return g
+
+
+def test_q8_through_full_chain():
+    """q8 inter-node activations ride the dispatcher -> chain -> collector
+    path end to end (CPU interpret mode) within the accumulated per-hop
+    error bound."""
+    g = _mlp()
+    params = g.init(jax.random.PRNGKey(0))
+    num_nodes = 2
+    eng = InferenceEngine(g, num_nodes, DispatcherCodecs(
+        data=WireCodec("q8", "none"),
+        weights=WireCodec("raw", "none")), max_batch=4)
+    eng.configure(params)
+    xs = [RNG.normal(size=(1, 16)).astype(np.float32) for _ in range(6)]
+    outs, rep = eng.run(xs)
+    eng.shutdown()
+    assert rep.codec == "Q8/Uncompressed"
+    # worst case: every hop (dispatcher feed + inter-node + tail) quantizes
+    # a tanh-bounded activation, and errors compound through |W| matmuls;
+    # with |acts| <= ~4 and small depth a loose stacked bound suffices
+    bound = (num_nodes + 1) * codecs.Q8Codec().error_bound(4.0) * 10
+    for x, out in zip(xs, outs):
+        ref = np.asarray(g.apply(params, jnp.asarray(x)))
+        assert np.abs(out - ref).max() <= bound, np.abs(out - ref).max()
