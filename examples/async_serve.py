@@ -7,6 +7,31 @@ queue shedding load, and the report showing per-node utilization, batch
 occupancy, and p50/p99 latency (the serving view of the paper's
 ``1/max_i service_i`` throughput law).
 
+Controller knobs (the serving-time feedback loop)
+-------------------------------------------------
+Passing ``controller=ControllerConfig(...)`` turns the static chain into a
+self-optimizing one.  The loop has two arms, each independently gateable:
+
+* ``repartition=True`` — every ``interval_s`` the controller folds the
+  nodes' measured per-stage timings into an EWMA cost model
+  (``ewma_alpha``), re-runs the partition DP on those *calibrated* costs,
+  and — only when the predicted bottleneck improves by more than
+  ``hysteresis`` (the anti-thrash deadband) — hot-migrates the cuts: the
+  shifted layers' weights ship to the affected neighbors and an epoch
+  marker fences the swap on the wire, so zero in-flight requests are
+  dropped.  ``min_requests`` gates decisions on window size,
+  ``cooldown_s`` spaces migrations, and ``window`` (layers) caps how far
+  one migration may move a cut (bounding the weight bytes shipped).
+* ``adapt_knobs=True`` — per node, the measured codec/compute stage-time
+  ratio retunes ``coalesce_s`` within ``coalesce_bounds`` (codec-bound
+  nodes grow the ingress coalescing window to amortize codec passes;
+  compute-bound nodes shrink it for latency) and ``max_batch`` within
+  [1, ``max_batch_cap``] (precompiled pow2 shapes stay authoritative).
+
+Per-request QoS rides the same admission queue: ``submit(..., priority=p)``
+weights the dequeue (band weight ``p + 1``, no starvation), and
+``client_quota=n`` caps any one client's in-flight requests.
+
     PYTHONPATH=src python examples/async_serve.py
 """
 import threading
@@ -15,7 +40,7 @@ import jax
 import numpy as np
 
 from repro.models import cnn
-from repro.runtime import AdmissionFull, InferenceEngine
+from repro.runtime import (AdmissionFull, ControllerConfig, InferenceEngine)
 from repro.runtime.dispatcher import DispatcherCodecs
 from repro.runtime.wire import WireCodec
 
@@ -27,7 +52,16 @@ engine = InferenceEngine(
     graph, NODES,
     DispatcherCodecs(data=WireCodec("zfp", "none", zfp_rate=16),
                      weights=WireCodec("raw", "none")),
-    max_batch=4, admission_depth=32)
+    max_batch=4, admission_depth=32,
+    client_quota=2 * PER_CLIENT,           # no client monopolizes admission
+    # close the measurement->plan loop.  min_requests is set above this
+    # short demo's traffic so the run shows calibration + knob adaptation
+    # without paying a live resnet migration (minutes of XLA recompiles on
+    # a laptop CPU); benchmarks/serve_load.py --rebalance demonstrates the
+    # hot repartition end to end on a serving-scale chain
+    controller=ControllerConfig(
+        interval_s=0.5, hysteresis=0.15, cooldown_s=5.0,
+        min_requests=2 * CLIENTS * PER_CLIENT))
 engine.configure(params)
 engine.start()
 
@@ -54,6 +88,7 @@ for t in threads:
     t.join()
 
 report = engine.report()
+controller_log = list(engine.controller.actions)
 engine.shutdown()
 
 for c in sorted(results):
@@ -68,4 +103,8 @@ for pn in report.per_node:
           f"{pn['util_compute']*100:4.1f}/{pn['util_encode']*100:4.1f}%  "
           f"mean batch {pn['batch_mean']:.2f}  "
           f"queue depth max {pn['queue_depth_max']}  "
-          f"service {pn['service_s']*1e3:.2f} ms")
+          f"service {pn['service_s']*1e3:.2f} ms  "
+          f"knobs mb={pn['max_batch']} co={pn['coalesce_s']*1e3:.1f}ms")
+print(f"partition epoch {report.epoch}, cuts {report.cuts}; "
+      f"controller decided: "
+      f"{[a.kind for a in controller_log] or '(no full period elapsed)'}")

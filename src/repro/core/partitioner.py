@@ -13,6 +13,16 @@ cost-aware ones the dispatcher can plan with:
 
 All strategies return a :class:`Partition` — the cut indices plus per-stage
 cost summaries that the emulator / pipeline runtime consume.
+
+Online recalibration (the serving-time feedback loop) plans on *measured*
+costs instead of the static models: :class:`CalibratedCosts` carries
+per-layer compute seconds plus per-byte codec/wire rates learned from real
+``BatchTrace`` telemetry, :func:`calibrated_partition` re-runs the DP on
+them (optionally warm-started in a window around the current cuts, which
+also bounds how many layers a live migration has to ship), and
+:func:`bounds_bottleneck` is the cost-delta API — it prices *any* candidate
+cuts under the same calibrated costs so a controller can compare "stay"
+vs "move" before committing a live repartition.
 """
 from __future__ import annotations
 
@@ -122,14 +132,18 @@ def _stage_costs(graph: LayerGraph, bounds: Sequence[int],
 def partition(graph: LayerGraph, num_stages: int,
               strategy: Strategy = "balanced_latency",
               link: LinkModel | None = None,
-              compute: "ComputeModel | Sequence[ComputeModel] | None" = None
-              ) -> Partition:
+              compute: "ComputeModel | Sequence[ComputeModel] | None" = None,
+              cuts: Sequence[int] | None = None) -> Partition:
     """Cut ``graph`` into ``num_stages`` contiguous partitions.
 
     ``compute`` may be a sequence of per-node models (heterogeneous edge
     cluster): the balanced strategies then assign more work to faster
     nodes (stage i runs on node i — the chain order is fixed by DEFER's
     topology).
+
+    ``cuts`` overrides the strategy with explicit interior cut indices
+    (cut after layer ``c``): how a dispatcher rebuilds its Partition after
+    a live repartition, and how benchmarks pin a deliberately bad plan.
     """
     link = link or LinkModel()
     computes = _computes(compute or ComputeModel(), num_stages)
@@ -138,7 +152,13 @@ def partition(graph: LayerGraph, num_stages: int,
     if not 1 <= num_stages <= n:
         raise ValueError(f"num_stages={num_stages} out of range for {n} layers")
 
-    if strategy == "equal_layers":
+    if cuts is not None:
+        bounds = [0, *sorted(cuts), n]
+        if len(bounds) != num_stages + 1 or len(set(bounds)) != len(bounds) \
+                or any(not 0 < c < n for c in cuts):
+            raise ValueError(f"cuts {tuple(cuts)} do not split {n} layers "
+                             f"into {num_stages} non-empty stages")
+    elif strategy == "equal_layers":
         # The paper's strategy: similar number of layers per partition.
         bounds = [round(i * n / num_stages) for i in range(num_stages + 1)]
         bounds = sorted(set(bounds))
@@ -171,21 +191,44 @@ def partition(graph: LayerGraph, num_stages: int,
 
 
 def _linear_partition_dp(w: np.ndarray, edge: np.ndarray, k: int,
-                         rates: np.ndarray | None = None) -> list[int]:
+                         rates: np.ndarray | None = None,
+                         stage_cost=None,
+                         prev_bounds: Sequence[int] | None = None,
+                         window: int | None = None) -> list[int]:
     """Minimize the max of (sum of w in stage / rate_j + edge at the cut).
 
     O(n^2 k) DP — n is layer count (<= a few hundred), fine.
     ``edge[i]`` is the cost charged to a stage whose last node is i
     (the outbound transfer of the cut after node i; edge[n-1] = 0).
     ``rates[j]`` divides stage j's work (heterogeneous nodes); None = 1.
+
+    ``stage_cost(lo, hi, j)`` overrides the additive cost above with an
+    arbitrary per-stage pricing (the calibrated staged-runtime max-of-stages
+    model); the DP itself only needs costs to be monotone in [lo, hi).
+
+    ``prev_bounds``/``window`` warm-start the search: every interior bound j
+    is constrained to ``prev_bounds[j] ± window``.  Besides shrinking the
+    search, this caps how many layers a live repartition can shift at once
+    (each shifted layer is weights on the wire).  The full DP is the
+    ``window=None`` special case.
     """
     n = len(w)
     prefix = np.concatenate([[0.0], np.cumsum(w)])
     if rates is None:
         rates = np.ones(k)
 
-    def stage_cost(lo: int, hi: int, j: int) -> float:  # nodes [lo, hi)
-        return (prefix[hi] - prefix[lo]) / rates[j] + edge[hi - 1]
+    if stage_cost is None:
+        def stage_cost(lo: int, hi: int, j: int) -> float:  # nodes [lo, hi)
+            return (prefix[hi] - prefix[lo]) / rates[j] + edge[hi - 1]
+
+    # hi_ok[j][i]: may the boundary after stage j land at layer i?
+    hi_ok = np.full((k + 1, n + 1), True)
+    if prev_bounds is not None and window is not None:
+        for j in range(1, k):
+            hi_ok[j] = False
+            lo = max(1, prev_bounds[j] - window)
+            hi = min(n - 1, prev_bounds[j] + window)
+            hi_ok[j][lo:hi + 1] = True
 
     INF = float("inf")
     # dp[j][i] = minimal bottleneck splitting first i nodes into j stages
@@ -194,16 +237,104 @@ def _linear_partition_dp(w: np.ndarray, edge: np.ndarray, k: int,
     dp[0][0] = 0.0
     for j in range(1, k + 1):
         for i in range(j, n - (k - j) + 1):
+            if not hi_ok[j][i]:
+                continue
             best, arg = INF, j - 1
             for m in range(j - 1, i):
+                if dp[j - 1][m] == INF:
+                    continue
                 c = max(dp[j - 1][m], stage_cost(m, i, j - 1))
                 if c < best:
                     best, arg = c, m
             dp[j][i] = best
             cut[j][i] = arg
+    if dp[k][n] == INF:        # window too tight to be feasible: full search
+        assert window is not None
+        return _linear_partition_dp(w, edge, k, rates, stage_cost)
     bounds = [n]
     i = n
     for j in range(k, 0, -1):
         i = int(cut[j][i])
         bounds.append(i)
     return bounds[::-1]
+
+
+# -- online cost calibration (the serving-time feedback loop) ----------------
+
+@dataclasses.dataclass
+class CalibratedCosts:
+    """Measured serving costs, in seconds, for pricing candidate cuts.
+
+    ``layer_s[i]`` is the calibrated compute time of layer i for one
+    request (EWMA of real per-node apply time, spread over the node's
+    layer range by static FLOPs share).  The codec/wire rates convert a
+    cut's crossing bytes (``cut_bytes[i]``, static graph property) into
+    per-request encode time at the sender and decode time at the receiver
+    — both measured amortized over real batches, so batching efficiency is
+    priced in.  ``head_in_bytes`` is what stage 0 decodes (the admitted
+    input); ``tail_out_bytes`` is what the last stage encodes for the
+    collector.
+    """
+
+    layer_s: np.ndarray                 # [n] per-layer compute seconds
+    cut_bytes: np.ndarray               # [n] bytes crossing cut after layer i
+    encode_s_per_byte: float = 0.0
+    decode_s_per_byte: float = 0.0
+    wire_s_per_byte: float = 0.0        # modeled link time (0 = in-process)
+    head_in_bytes: float = 0.0
+    tail_out_bytes: float = 0.0
+
+    def __post_init__(self):
+        # prefix sums make stage_service_s O(1): the DP calls it O(n^2 k)
+        # times per re-plan, every control period, possibly on 100+-layer
+        # graphs — an O(n) slice-sum inside would steal whole cores from
+        # serving
+        self._prefix = np.concatenate([[0.0], np.cumsum(self.layer_s)])
+
+    def stage_service_s(self, lo: int, hi: int, staged: bool = True) -> float:
+        """Predicted service time of a stage covering layers [lo, hi).
+
+        A staged node overlaps its decode / compute / encode threads, so
+        its steady-state service rate is set by the *max* stage time
+        (paper: throughput = 1 / max_i service_i); an unstaged node pays
+        the sum.
+        """
+        in_b = self.head_in_bytes if lo == 0 else float(self.cut_bytes[lo - 1])
+        out_b = (self.tail_out_bytes if hi == len(self.layer_s)
+                 else float(self.cut_bytes[hi - 1]))
+        dec = self.decode_s_per_byte * in_b
+        cmp = float(self._prefix[hi] - self._prefix[lo])
+        enc = (self.encode_s_per_byte + self.wire_s_per_byte) * out_b
+        return max(dec, cmp, enc) if staged else dec + cmp + enc
+
+
+def bounds_bottleneck(costs: CalibratedCosts, bounds: Sequence[int],
+                      staged: bool = True) -> float:
+    """Cost-delta API: predicted bottleneck service time of ANY cuts under
+    the calibrated costs — price the current plan and a candidate with the
+    same ruler before paying for a live migration."""
+    return max(costs.stage_service_s(lo, hi, staged)
+               for lo, hi in zip(bounds, bounds[1:]))
+
+
+def calibrated_partition(costs: CalibratedCosts, num_stages: int,
+                         staged: bool = True,
+                         prev_bounds: Sequence[int] | None = None,
+                         window: int | None = None
+                         ) -> tuple[list[int], float]:
+    """Re-run the partition DP on calibrated (measured) costs.
+
+    Returns ``(bounds, predicted_bottleneck_s)``.  ``prev_bounds`` +
+    ``window`` warm-start the DP around the live cuts (bounding both the
+    search and the weight bytes a migration ships); infeasible windows
+    fall back to the full search.
+    """
+    n = len(costs.layer_s)
+
+    def stage_cost(lo: int, hi: int, j: int) -> float:
+        return costs.stage_service_s(lo, hi, staged)
+
+    bounds = _linear_partition_dp(
+        costs.layer_s, np.zeros(n), num_stages, stage_cost=stage_cost,
+        prev_bounds=prev_bounds, window=window)
+    return bounds, bounds_bottleneck(costs, bounds, staged)

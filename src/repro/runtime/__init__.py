@@ -1,5 +1,9 @@
+from repro.runtime.controller import (Controller,  # noqa: F401
+                                      ControllerConfig, CostCalibrator,
+                                      decide_repartition, suggest_knobs)
 from repro.runtime.dispatcher import (AdmissionFull,  # noqa: F401
                                       Dispatcher, DispatcherCodecs, NodeError)
 from repro.runtime.engine import EngineReport, InferenceEngine  # noqa: F401
 from repro.runtime.wire import (BatchEnvelope, Envelope,  # noqa: F401
-                                RowExtent, WireCodec, WireRecord)
+                                NodePlan, ReconfigMarker, RowExtent,
+                                WireCodec, WireRecord)

@@ -19,21 +19,22 @@ import queue
 import threading
 import time
 import traceback
-from collections import defaultdict
+from collections import defaultdict, deque
 from concurrent.futures import Future
-from typing import Any, Iterable
+from typing import Any, Iterable, Sequence
 
 import numpy as np
 
 from repro.core.graph import LayerGraph
 from repro.core.partitioner import LinkModel, Partition, partition
 from repro.runtime.node import _STOP, ComputeNode
-from repro.runtime.wire import (BatchEnvelope, RowExtent, WireCodec,
-                                WireRecord, slice_parts)
+from repro.runtime.wire import (BatchEnvelope, NodePlan, ReconfigMarker,
+                                RowExtent, WireCodec, WireRecord, slice_parts)
 
 
 class AdmissionFull(Exception):
-    """The bounded admission queue is full (backpressure reached the client)."""
+    """The bounded admission queue is full, or the submitting client hit its
+    in-flight quota (backpressure reached the client)."""
 
 
 class NodeError(RuntimeError):
@@ -50,6 +51,76 @@ class DispatcherCodecs:
     data: WireCodec = WireCodec("zfp", "none", zfp_rate=16)
 
 
+class _WeightedAdmissionQueue:
+    """Bounded admission queue with weighted-fair dequeue across priority
+    bands.
+
+    ``put`` files an item under its priority band (higher = more urgent)
+    and applies the same bounded-capacity backpressure as a plain FIFO.
+    ``get`` runs smooth weighted round-robin over the non-empty bands with
+    weight ``priority + 1``: a priority-1 client is dequeued ~2x as often
+    as a priority-0 client *when both are backlogged*, but low bands keep
+    accumulating credit, so nothing starves.  Within a band, FIFO.
+
+    ``put(_STOP)`` latches a stop flag instead of enqueueing, and ``get``
+    surfaces _STOP only once every band is drained — the stop token can
+    never overtake an admitted request (shutdown(drain=False) still
+    completes in-flight work, exactly like the old FIFO)."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._bands: dict[int, deque] = {}
+        self._credit: dict[int, float] = {}
+        self._size = 0
+        self._stopped = False
+        self._mutex = threading.Lock()
+        self._not_empty = threading.Condition(self._mutex)
+        self._not_full = threading.Condition(self._mutex)
+
+    def qsize(self) -> int:
+        with self._mutex:
+            return self._size
+
+    def put(self, item: Any, block: bool = True,
+            timeout: float | None = None, priority: int = 0) -> None:
+        with self._not_full:
+            if item is _STOP:
+                self._stopped = True
+                self._not_empty.notify_all()
+                return
+            if self._size >= self.maxsize:
+                if not block or not self._not_full.wait_for(
+                        lambda: self._size < self.maxsize, timeout=timeout):
+                    raise queue.Full
+            band = self._bands.setdefault(priority, deque())
+            self._credit.setdefault(priority, 0.0)
+            band.append(item)
+            self._size += 1
+            self._not_empty.notify()
+
+    def get(self) -> Any:
+        with self._not_empty:
+            self._not_empty.wait_for(
+                lambda: self._size > 0 or self._stopped)
+            if self._size == 0:          # stopped AND fully drained
+                return _STOP
+            # smooth weighted round-robin: every backlogged band earns its
+            # weight, the richest band is served and pays the round total
+            total = 0.0
+            for p, dq in self._bands.items():
+                if dq:
+                    w = max(1.0, p + 1.0)    # sub-zero priorities still run
+                    self._credit[p] += w
+                    total += w
+            pick = max((p for p, dq in self._bands.items() if dq),
+                       key=lambda p: (self._credit[p], p))
+            self._credit[pick] -= total
+            item = self._bands[pick].popleft()
+            self._size -= 1
+            self._not_full.notify()
+            return item
+
+
 class Dispatcher:
     """Owns the chain: planning, configuration, and the admission stream."""
 
@@ -60,14 +131,21 @@ class Dispatcher:
                  max_batch: int = 8,
                  admission_depth: int = 64,
                  queue_depth: int = 8,
-                 staged: bool = True):
+                 staged: bool = True,
+                 cuts: Sequence[int] | None = None,
+                 client_quota: int | None = None,
+                 shape_buckets: str = "exact",
+                 max_batch_cap: int | None = None):
         self.graph = graph
         self.codecs = codecs or DispatcherCodecs()
+        self.link = link
         self.partition: Partition = partition(
-            graph, num_nodes, strategy=strategy, link=link)
+            graph, num_nodes, strategy=strategy, link=link, cuts=cuts)
         self.nodes: list[ComputeNode] = [
             ComputeNode(i, self.codecs.data, queue_depth=queue_depth,
-                        max_batch=max_batch, staged=staged)
+                        max_batch=max_batch, staged=staged,
+                        shape_buckets=shape_buckets,
+                        max_batch_cap=max_batch_cap)
             for i in range(num_nodes)]
         self.config_records: list[WireRecord] = []
         self.result_queue: queue.Queue = queue.Queue()
@@ -75,7 +153,11 @@ class Dispatcher:
             self.nodes[i].next_inbox = self.nodes[i + 1].inbox
         self.nodes[-1].next_inbox = self.result_queue
 
-        self.admission: queue.Queue = queue.Queue(maxsize=admission_depth)
+        self.admission = _WeightedAdmissionQueue(admission_depth)
+        # per-client admission quota: max in-flight (admitted, unresolved)
+        # requests per client_id; None = unlimited
+        self.client_quota = client_quota
+        self._client_inflight: dict[Any, int] = defaultdict(int)
         # windowed stats (cleared by reset_stats): dispatcher-side encode
         # records and admission->result latencies
         self.feed_records: list[WireRecord] = []
@@ -92,6 +174,15 @@ class Dispatcher:
         self._configured = False
         self._started = False
         self._closed = False
+        # live-repartition state: reconfigure() is serialized, the epoch
+        # counts committed migrations, and the event acknowledges the
+        # marker's arrival at the tail (chain-wide swap complete)
+        self.epoch = 0
+        self.reconfig_records: list[dict] = []
+        self._params: dict[str, Any] | None = None
+        self._reconfig_lock = threading.Lock()
+        self._reconfig_event: threading.Event | None = None
+        self._reconfig_expect = 0      # epoch the pending event waits for
 
     # -- configuration step --------------------------------------------------
     def configure(self, params: dict[str, Any]) -> None:
@@ -118,6 +209,9 @@ class Dispatcher:
             self.config_records.append(rec)
             node.configure(self.graph, lo, hi, arch_blob, weights_blob,
                            self.codecs.weights)
+        # the dispatcher owns the full model (paper setting): retained so a
+        # live repartition can ship the weight DIFF of shifted layers only
+        self._params = params
         self._configured = True
 
     def precompile(self) -> None:
@@ -162,6 +256,14 @@ class Dispatcher:
             item = self.result_queue.get()
             if item is _STOP:
                 return
+            if isinstance(item, ReconfigMarker):
+                # the epoch fence cleared the whole chain: every node
+                # swapped.  Ack by epoch — a stale fence from an earlier
+                # timed-out reconfigure must not acknowledge a later one
+                ev = self._reconfig_event
+                if ev is not None and item.epoch >= self._reconfig_expect:
+                    ev.set()
+                continue
             env: BatchEnvelope = item
             if env.error is not None:
                 self._finish_batch(env.extents, error=env.error)
@@ -193,6 +295,7 @@ class Dispatcher:
                     # reported latency as the error rate rises
                     self.latencies.append(now - ext.t_submit)
                 self._inflight -= 1
+                self._client_inflight[ext.client_id] -= 1
                 done.append((fut, results[idx] if results is not None
                              else None))
             self._idle.notify_all()
@@ -205,12 +308,21 @@ class Dispatcher:
 
     # -- admission --------------------------------------------------------------
     def submit(self, x: np.ndarray, client_id: Any = 0,
-               block: bool = True, timeout: float | None = None) -> Future:
+               block: bool = True, timeout: float | None = None,
+               priority: int = 0) -> Future:
         """Admit one request.  Returns a Future resolving to the output.
 
         When the bounded admission queue is full, blocks (``block=True``)
         or raises :class:`AdmissionFull` — that is the backpressure a
-        front-end needs to shed load instead of queuing unboundedly.
+        front-end needs to shed load instead of queuing unboundedly.  A
+        client at its in-flight quota (``client_quota``) is refused
+        immediately with :class:`AdmissionFull` regardless of ``block`` —
+        one greedy client can no longer monopolize the admission queue.
+
+        ``priority`` selects the admission band: the pump dequeues bands
+        weighted-fair (weight ``priority + 1``), so higher-priority
+        backlogged clients drain proportionally faster without starving
+        priority 0.
         """
         if not self._started:
             self.start()
@@ -221,12 +333,18 @@ class Dispatcher:
         with self._lock:
             if self._closed:
                 raise RuntimeError("dispatcher is shut down")
+            if self.client_quota is not None \
+                    and self._client_inflight[client_id] >= self.client_quota:
+                raise AdmissionFull(
+                    f"client {client_id!r} at quota "
+                    f"({self.client_quota} in flight)")
             rid = self._next_id
             self._next_id += 1
             seq = self._client_seq[client_id]
             self._client_seq[client_id] += 1
             self._futures[rid] = fut
             self._inflight += 1
+            self._client_inflight[client_id] += 1
             self._admitting += 1
         try:
             arr = np.asarray(x)
@@ -238,26 +356,28 @@ class Dispatcher:
                            t_submit=time.perf_counter())], blob)
             with self._lock:
                 self.feed_records.append(rec)
-            self.admission.put(env, block=block, timeout=timeout)
+            self.admission.put(env, block=block, timeout=timeout,
+                               priority=priority)
         except queue.Full:
-            with self._lock:
-                self._futures.pop(rid, None)
-                self._inflight -= 1
-                self._admitting -= 1
-                self._idle.notify_all()
+            self._unregister(rid, client_id)
             raise AdmissionFull(
                 f"admission queue full ({self.admission.maxsize} deep)")
         except BaseException:
-            with self._lock:
-                self._futures.pop(rid, None)
-                self._inflight -= 1
-                self._admitting -= 1
-                self._idle.notify_all()
+            self._unregister(rid, client_id)
             raise
         with self._lock:
             self._admitting -= 1
             self._idle.notify_all()
         return fut
+
+    def _unregister(self, rid: int, client_id: Any) -> None:
+        """Roll back a registration whose envelope never reached admission."""
+        with self._lock:
+            self._futures.pop(rid, None)
+            self._inflight -= 1
+            self._client_inflight[client_id] -= 1
+            self._admitting -= 1
+            self._idle.notify_all()
 
     def infer_stream(self, inputs: Iterable[np.ndarray],
                      client_id: Any = 0) -> list[np.ndarray]:
@@ -265,6 +385,110 @@ class Dispatcher:
         submission order (FIFO for this client by construction)."""
         futures = [self.submit(x, client_id=client_id) for x in inputs]
         return [f.result() for f in futures]
+
+    # -- live reconfiguration (the controller's commit path) -------------------
+    def reconfigure(self, cuts: Sequence[int],
+                    timeout: float | None = 60.0) -> dict:
+        """Hot-migrate partition boundaries on the RUNNING chain.
+
+        Two-phase: (1) PREPARE — for each node whose range changes, build a
+        :class:`NodePlan` carrying its new architecture spec and the wire-
+        encoded weights of only the layers it GAINS (the weight diff; kept
+        layers are reused in place); (2) COMMIT — inject one
+        :class:`ReconfigMarker` at the head of the chain.  The marker rides
+        the same FIFO queues as data envelopes, so each node swaps exactly
+        when the fence passes its compute stage: every in-flight request is
+        processed by a consistent partition end-to-end and none is dropped
+        or recomputed.  Blocks until the tail collector acknowledges the
+        fence (or ``timeout``).
+
+        The fence rides in-process FIFO queues, so it cannot be lost: an
+        un-acknowledged return (``acknowledged: False``) means the marker
+        is still behind a backlog, not that the migration failed — the
+        nodes WILL adopt the committed cuts when it clears, which is why
+        ``partition``/``epoch`` are updated to the committed target either
+        way.  Callers treat un-acked as migration-in-progress (the
+        controller skips its post-swap precompile and rebaselines its
+        telemetry window).
+
+        Returns a summary record (also appended to ``reconfig_records``).
+        """
+        assert self._configured and self._params is not None, \
+            "configure() before reconfigure()"
+        assert self._started, "reconfigure() fences a running chain"
+        with self._reconfig_lock:
+            new_bounds = [0, *sorted(int(c) for c in cuts),
+                          len(self.graph.nodes)]
+            new_ranges = list(zip(new_bounds, new_bounds[1:]))
+            old_ranges = [tuple(r) for r in self.partition.ranges()]
+            if len(new_ranges) != len(self.nodes):
+                raise ValueError(
+                    f"cuts {tuple(cuts)} give {len(new_ranges)} stages for "
+                    f"{len(self.nodes)} nodes")
+            if any(hi <= lo for lo, hi in new_ranges):
+                raise ValueError(f"cuts {tuple(cuts)} leave an empty stage")
+            if [tuple(r) for r in new_ranges] == old_ranges:
+                return {"epoch": self.epoch, "changed": False}
+
+            epoch = self.epoch + 1
+            plans: dict[int, NodePlan] = {}
+            shipped = 0
+            moved_layers = 0
+            for i, ((lo, hi), (lo2, hi2)) in enumerate(
+                    zip(old_ranges, new_ranges)):
+                if (lo, hi) == (lo2, hi2):
+                    continue               # untouched node: no plan, no bytes
+                names = [n.name for n in self.graph.slice_nodes(lo2, hi2)]
+                kept = {n.name for n in self.graph.slice_nodes(lo, hi)}
+                gained = [nm for nm in names if nm not in kept]
+                moved_layers += len(gained)
+                spec = {"layers": names,
+                        "next": i + 1 if i + 1 < len(self.nodes) else None}
+                arch_blob = json.dumps(spec).encode()
+                weights_blob = b""
+                if gained:
+                    weights_blob, rec = self.codecs.weights.encode_tree(
+                        {nm: self._params[nm] for nm in gained}, "weights")
+                    self.config_records.append(rec)
+                plans[i] = NodePlan(lo2, hi2, arch_blob, weights_blob,
+                                    self.codecs.weights,
+                                    wire_bytes=len(arch_blob)
+                                    + len(weights_blob))
+                shipped += plans[i].wire_bytes
+
+            ev = threading.Event()
+            self._reconfig_expect = epoch
+            self._reconfig_event = ev
+            t0 = time.perf_counter()
+            # the fence enters the head node's inbox like any envelope and
+            # stays ordered behind everything already pumped
+            self.nodes[0].inbox.put(ReconfigMarker(epoch, plans))
+            acked = ev.wait(timeout)
+            self._reconfig_event = None
+            self.partition = partition(self.graph, len(self.nodes),
+                                       link=self.link, cuts=new_bounds[1:-1])
+            self.epoch = epoch
+            record = {
+                "epoch": epoch, "changed": True, "acknowledged": acked,
+                "cuts": tuple(new_bounds[1:-1]),
+                "moved_layers": moved_layers,
+                "shipped_bytes": shipped,
+                "migrate_s": time.perf_counter() - t0,
+                "nodes_touched": sorted(plans),
+            }
+            self.reconfig_records.append(record)
+            return record
+
+    def set_node_knobs(self, index: int, max_batch: int | None = None,
+                       coalesce_s: float | None = None) -> None:
+        """Retune one node's serving knobs live (controller's actuator).
+        ``max_batch`` is clamped to [1, max_batch_cap] so precompiled batch
+        specializations stay authoritative."""
+        node = self.nodes[index]
+        if max_batch is not None:
+            node.max_batch = min(max(1, int(max_batch)), node.max_batch_cap)
+        if coalesce_s is not None:
+            node.coalesce_s = max(0.0, float(coalesce_s))
 
     # -- teardown ---------------------------------------------------------------
     def drain(self, timeout: float | None = None) -> bool:

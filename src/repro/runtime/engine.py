@@ -17,13 +17,26 @@ fractions of the measurement-window wall clock, so the staged codec/compute
 overlap is visible), queue depth, batch occupancy, and p50/p99 request
 latency, so the paper's ``1/max_i service_i`` law is observable under real
 multi-client load.
+
+Utilizations come in two flavors per stage: the clamped ``util_*`` (a
+fraction of the window, capped at 1.0 for dashboard sanity) and the raw
+``util_*_raw`` (busy / wall, uncapped).  On an oversubscribed host a busy
+counter can legitimately exceed the wall clock — stage threads count
+runnable-but-descheduled time — and the serving controller needs to SEE
+that oversubscription honestly to avoid tuning against a saturated lie.
+
+With ``controller=ControllerConfig(...)`` the engine runs the serving-time
+feedback loop (:mod:`repro.runtime.controller`): online cost calibration
+from this report's raw telemetry, periodic re-planning of the partition on
+measured costs, hot repartitioning behind an epoch fence, and adaptive
+``max_batch`` / ``coalesce_s`` per node.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from concurrent.futures import Future
-from typing import Any, Iterable, Iterator
+from typing import Any, Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -31,6 +44,7 @@ from repro.core.graph import LayerGraph
 from repro.core.metrics import (EDGE, HardwareProfile, LatencySummary,
                                 compute_energy_j, network_energy_j)
 from repro.core.partitioner import LinkModel
+from repro.runtime.controller import Controller, ControllerConfig
 from repro.runtime.dispatcher import Dispatcher, DispatcherCodecs
 from repro.runtime.wire import CHUNK_BYTES
 
@@ -50,6 +64,8 @@ class EngineReport:
     p50_latency_s: float               # admission -> result, this window
     p99_latency_s: float
     per_node: list[dict]
+    cuts: tuple = ()                   # live partition cut indices
+    epoch: int = 0                     # committed live repartitions so far
 
 
 class InferenceEngine:
@@ -61,7 +77,12 @@ class InferenceEngine:
                  max_batch: int = 8,
                  admission_depth: int = 64,
                  queue_depth: int = 8,
-                 staged: bool = True):
+                 staged: bool = True,
+                 cuts: Sequence[int] | None = None,
+                 client_quota: int | None = None,
+                 shape_buckets: str = "exact",
+                 max_batch_cap: int | None = None,
+                 controller: ControllerConfig | None = None):
         self.graph = graph
         self.hw = hw
         self.link = link or LinkModel(bandwidth_bytes_per_s=hw.link_bw,
@@ -69,7 +90,14 @@ class InferenceEngine:
         self.dispatcher = Dispatcher(graph, num_nodes, codecs, strategy,
                                      self.link, max_batch=max_batch,
                                      admission_depth=admission_depth,
-                                     queue_depth=queue_depth, staged=staged)
+                                     queue_depth=queue_depth, staged=staged,
+                                     cuts=cuts, client_quota=client_quota,
+                                     shape_buckets=shape_buckets,
+                                     max_batch_cap=max_batch_cap)
+        # the serving-time feedback loop (opt-in): calibrate costs online,
+        # repartition behind an epoch fence, adapt batching knobs
+        self.controller = (Controller(self.dispatcher, controller)
+                           if controller is not None else None)
         self._window_t0 = time.perf_counter()
 
     def configure(self, params: dict) -> None:
@@ -82,14 +110,19 @@ class InferenceEngine:
 
     def start(self) -> None:
         self.dispatcher.start()
+        if self.controller is not None:
+            self.controller.start()
         self._window_t0 = time.perf_counter()
 
     # -- async serving path ---------------------------------------------------
     def submit(self, x: np.ndarray, client_id: Any = 0,
-               block: bool = True, timeout: float | None = None) -> Future:
-        """Admit one request; backpressure per Dispatcher.submit()."""
+               block: bool = True, timeout: float | None = None,
+               priority: int = 0) -> Future:
+        """Admit one request; backpressure per Dispatcher.submit().
+        ``priority`` weights the admission dequeue (band weight
+        ``priority + 1``) — see :meth:`Dispatcher.submit`."""
         return self.dispatcher.submit(x, client_id=client_id, block=block,
-                                      timeout=timeout)
+                                      timeout=timeout, priority=priority)
 
     def stream(self, inputs: Iterable[np.ndarray], client_id: Any = 0,
                timeout: float | None = None) -> Iterator[np.ndarray]:
@@ -120,6 +153,8 @@ class InferenceEngine:
 
     def shutdown(self, drain: bool = True,
                  timeout: float | None = None) -> None:
+        if self.controller is not None:
+            self.controller.stop()       # no fence may enter a closing chain
         self.dispatcher.shutdown(drain=drain, timeout=timeout)
 
     # -- metrics ---------------------------------------------------------------
@@ -181,9 +216,20 @@ class InferenceEngine:
                 "util_decode": min(1.0, busy_dec / util_wall),
                 "util_compute": min(1.0, busy_cmp / util_wall),
                 "util_encode": min(1.0, busy_enc / util_wall),
+                # raw (unclamped) busy fractions: can exceed 1.0 on an
+                # oversubscribed host (runnable-but-descheduled time books
+                # as busy) — the controller and BENCH notes read these to
+                # see oversubscription honestly; the clamped ones above
+                # stay for dashboards
+                "util_decode_raw": busy_dec / util_wall,
+                "util_compute_raw": busy_cmp / util_wall,
+                "util_encode_raw": busy_enc / util_wall,
                 "busy_decode_s": busy_dec,
                 "busy_compute_s": busy_cmp,
                 "busy_encode_s": busy_enc,
+                "max_batch": node.max_batch,
+                "coalesce_s": node.coalesce_s,
+                "layers": [n.name for n in node._nodes],
                 "queue_depth_mean": (float(np.mean(depths)) if depths
                                      else 0.0),
                 "queue_depth_max": max(depths) if depths else 0,
@@ -211,4 +257,6 @@ class InferenceEngine:
             p50_latency_s=lat.p50_s,
             p99_latency_s=lat.p99_s,
             per_node=per_node,
+            cuts=tuple(d.partition.cuts),
+            epoch=d.epoch,
         )

@@ -47,8 +47,9 @@ import jax
 import numpy as np
 
 from repro.core.graph import LayerGraph, LayerNode
-from repro.runtime.wire import (BatchEnvelope, RowExtent, WireCodec,
-                                WireRecord, slice_parts, tree_unflatten_paths)
+from repro.runtime.wire import (BatchEnvelope, ReconfigMarker, RowExtent,
+                                WireCodec, WireRecord, slice_parts,
+                                tree_unflatten_paths)
 
 _STOP = object()
 
@@ -99,19 +100,46 @@ def _signature(boundary: dict[str, np.ndarray]) -> tuple:
                         for k, v in boundary.items()))
 
 
+def _pad_middle(arr: np.ndarray) -> np.ndarray:
+    """Zero-pad every middle axis up to the next power of two (no-op for
+    rank <= 2 or already-pow2 sizes)."""
+    if arr.ndim <= 2:
+        return arr
+    pads = [(0, 0)] + [(0, _bucket_rows(s) - s) for s in arr.shape[1:-1]] \
+        + [(0, 0)]
+    if all(p == (0, 0) for p in pads):
+        return arr
+    return np.pad(arr, pads)
+
+
 class ComputeNode:
     """One compute node in the chain."""
 
     def __init__(self, index: int, data_codec: WireCodec,
                  queue_depth: int = 8, max_batch: int = 8,
                  pad_batches: bool = True, staged: bool = True,
-                 stage_depth: int = 2, coalesce_s: float = 0.005):
+                 stage_depth: int = 2, coalesce_s: float = 0.005,
+                 shape_buckets: str = "exact",
+                 max_batch_cap: int | None = None):
         self.index = index
         self.data_codec = data_codec
+        # max_batch and coalesce_s are ADAPTIVE knobs: the serving
+        # controller retunes them online from the measured codec/compute
+        # stage-time ratio (plain attribute writes; each wave re-reads them)
         self.max_batch = max(1, max_batch)
         self.pad_batches = pad_batches
         self.staged = staged
         self.coalesce_s = coalesce_s
+        # "pow2": near-miss trailing shapes merge into one apply via
+        # bucketed pad-to-shape (opt-in: requires layers that preserve and
+        # act independently along the padded middle axes)
+        assert shape_buckets in ("exact", "pow2")
+        self.shape_buckets = shape_buckets
+        # ceiling for the controller's adaptive max_batch growth;
+        # precompile() traces up to the cap so growth never compiles
+        # inside a serving window
+        self.max_batch_cap = max(self.max_batch, max_batch_cap or 0)
+        self.epoch = 0              # last ReconfigMarker this node committed
         self.inbox: queue.Queue = queue.Queue(maxsize=queue_depth)
         self.next_inbox: queue.Queue | None = None
         self._to_compute: queue.Queue = queue.Queue(maxsize=max(1, stage_depth))
@@ -122,6 +150,16 @@ class ComputeNode:
         self._compute_pending = None
         self.traces: list[BatchTrace] = []
         self.queue_depths: list[int] = []
+        # running totals over the window (kept alongside the trace list so
+        # the controller's periodic snapshot() is O(1), not O(waves))
+        self._depth_sum = 0
+        self._depth_count = 0
+        self._trace_n = 0
+        self._trace_compute_s = 0.0
+        self._trace_serialize_s = 0.0
+        self._trace_deserialize_s = 0.0
+        self._trace_payload_bytes = 0
+        self._trace_encodes = 0
         self.busy_decode_s: float = 0.0
         self.busy_compute_s: float = 0.0
         self.busy_encode_s: float = 0.0
@@ -163,18 +201,60 @@ class ComputeNode:
             WireRecord("weights", sum(a.nbytes for a in flat.values()),
                        len(weights_blob), 0.0, t1 - t0))
         self._graph = graph
-        self._nodes = graph.slice_nodes(lo, hi)
+        self._set_range(lo, hi)
         assert [n.name for n in self._nodes] == spec["layers"], \
             "wire architecture disagrees with local layer code"
-        # chain semantics: inbound wire = everything crossing the cut before
-        # this stage; outbound = everything crossing the cut after (includes
-        # pass-through activations this stage merely relays)
-        self._required = graph.crossing_names(lo - 1) if lo > 0 else [""]
-        self._exported = (graph.crossing_names(hi - 1) if hi < len(graph.nodes)
-                          else [graph.nodes[-1].name])
         self._params = {k: jax.tree_util.tree_map(jax.numpy.asarray, v)
                         for k, v in nested.items()}
         self._make_apply()
+
+    def _set_range(self, lo: int, hi: int) -> None:
+        """Adopt layer range [lo, hi): chain semantics say inbound wire =
+        everything crossing the cut before this stage; outbound = everything
+        crossing the cut after (includes pass-through activations this
+        stage merely relays)."""
+        graph = self._graph
+        self._nodes = graph.slice_nodes(lo, hi)
+        self._required = graph.crossing_names(lo - 1) if lo > 0 else [""]
+        self._exported = (graph.crossing_names(hi - 1) if hi < len(graph.nodes)
+                          else [graph.nodes[-1].name])
+
+    def _apply_reconfig(self, marker: ReconfigMarker) -> None:
+        """Commit a live repartition at the epoch fence (compute stage).
+
+        Runs on the compute thread exactly when the marker passes it, so
+        every envelope ahead of the marker was computed with the old
+        partition and every one behind it gets the new — no request sees a
+        mixed chain.  Weights arrive as a DIFF: only layers this node
+        gains were shipped; layers it keeps are reused in place, layers it
+        loses are dropped."""
+        plan = marker.plans.get(self.index)
+        self.epoch = marker.epoch
+        if plan is None:                 # this node's range did not change
+            return
+        import json
+        t0 = time.perf_counter()
+        spec = json.loads(plan.arch_blob.decode())
+        params = {name: self._params[name] for name in spec["layers"]
+                  if name in self._params}
+        if plan.weights_blob:
+            flat, _ = plan.weights_codec.decode_tree(plan.weights_blob)
+            for name, v in tree_unflatten_paths(flat).items():
+                params[name] = jax.tree_util.tree_map(jax.numpy.asarray, v)
+        self._set_range(plan.lo, plan.hi)
+        assert [n.name for n in self._nodes] == spec["layers"], \
+            "wire architecture disagrees with local layer code"
+        # param-less layers (pool / add / activation nodes) legitimately
+        # have no wire entry — only parameterized layers must have arrived
+        missing = [n.name for n in self._nodes if n.name not in params
+                   and jax.tree_util.tree_leaves(n.param_spec)]
+        assert not missing, f"reconfig weights diff is missing {missing}"
+        self._params = params
+        self._make_apply()
+        self.config_records.append(WireRecord(
+            "reconfig", sum(np.asarray(l).nbytes for l in
+                            jax.tree_util.tree_leaves(params)),
+            plan.wire_bytes, 0.0, time.perf_counter() - t0))
 
     def _make_apply(self):
         nodes, params = self._nodes, self._params
@@ -210,7 +290,7 @@ class ComputeNode:
         base_rows = next(iter(base.values())).shape[0]
         seen: set[int] = set()
         r = 1
-        while r <= self.max_batch:
+        while r <= self.max_batch_cap:
             target = (_bucket_rows(r * base_rows) if self.pad_batches
                       else r * base_rows)
             r *= 2
@@ -255,9 +335,68 @@ class ComputeNode:
         with self._stats_lock:
             self.traces = []
             self.queue_depths = []
+            self._depth_sum = 0
+            self._depth_count = 0
+            self._trace_n = 0
+            self._trace_compute_s = 0.0
+            self._trace_serialize_s = 0.0
+            self._trace_deserialize_s = 0.0
+            self._trace_payload_bytes = 0
+            self._trace_encodes = 0
             self.busy_decode_s = 0.0
             self.busy_compute_s = 0.0
             self.busy_encode_s = 0.0
+
+    def _record_depth(self, depth: int) -> None:
+        """Record one merge's queue-depth sample.  Caller holds
+        ``_stats_lock``."""
+        self.queue_depths.append(depth)
+        self._depth_sum += depth
+        self._depth_count += 1
+
+    def _record_trace(self, trace: BatchTrace) -> None:
+        """Append a finished batch's trace and fold it into the running
+        totals.  Caller must hold ``_stats_lock``."""
+        self.traces.append(trace)
+        self._trace_n += trace.n
+        self._trace_compute_s += trace.compute_s
+        self._trace_serialize_s += trace.serialize_s
+        self._trace_deserialize_s += trace.deserialize_s
+        self._trace_payload_bytes += trace.payload_bytes
+        self._trace_encodes += trace.encodes
+
+    def snapshot(self) -> dict:
+        """One consistent view of the current measurement window's
+        telemetry — what the serving controller calibrates costs and
+        adapts knobs from.  All time fields are window totals; ``n`` is
+        requests computed this window.  O(1): reads the running totals,
+        not the trace list."""
+        with self._stats_lock:
+            waves = len(self.traces)
+            return {
+                "node": self.index,
+                "n": self._trace_n,
+                "compute_s": self._trace_compute_s,
+                "serialize_s": self._trace_serialize_s,
+                "deserialize_s": self._trace_deserialize_s,
+                "payload_bytes": self._trace_payload_bytes,
+                "encodes": self._trace_encodes,
+                "busy_decode_s": self.busy_decode_s,
+                "busy_compute_s": self.busy_compute_s,
+                "busy_encode_s": self.busy_encode_s,
+                "queue_depth_mean": (self._depth_sum / self._depth_count
+                                     if self._depth_count else 0.0),
+                "batch_mean": (self._trace_n / waves if waves else 0.0),
+                # raw accumulators, so a delta-ing consumer (the
+                # controller) can rebuild per-interval means instead of
+                # mixing interval counters with window-cumulative gauges
+                "waves": waves,
+                "depth_sum": self._depth_sum,
+                "depth_count": self._depth_count,
+                "max_batch": self.max_batch,
+                "coalesce_s": self.coalesce_s,
+                "epoch": self.epoch,
+            }
 
     # -- stage 1: ingress (decode) --------------------------------------------
     def _ingress_loop(self) -> None:
@@ -273,6 +412,11 @@ class ComputeNode:
             if env is _STOP:
                 self._to_compute.put(_STOP)
                 return
+            if isinstance(env, ReconfigMarker):
+                # the epoch fence rides the FIFO: decode is partition-
+                # independent, so ingress just relays it in order
+                self._to_compute.put(env)
+                continue
             wave = [env]
             n_parts = env.n if env.error is None else 0
             saw_stop = False
@@ -298,6 +442,11 @@ class ComputeNode:
                         continue
                 if nxt is _STOP:
                     saw_stop = True
+                    break
+                if isinstance(nxt, ReconfigMarker):
+                    # close the wave at the fence; the marker leads the
+                    # next iteration so it stays ordered behind this wave
+                    self._ingress_pending = nxt
                     break
                 if nxt.error is None and n_parts + nxt.n > self.max_batch:
                     # would overflow the batch contract (and the pow2
@@ -348,6 +497,12 @@ class ComputeNode:
             if item is _STOP:
                 self._to_encode.put(_STOP)
                 return
+            if isinstance(item, ReconfigMarker):
+                # the fence reached the compute stage: swap partitions NOW
+                # (everything ahead of it already computed on the old one)
+                self._apply_reconfig(item)
+                self._to_encode.put(item)
+                continue
             if isinstance(item, BatchEnvelope):  # error passthrough
                 self._to_encode.put(item)
                 continue
@@ -364,6 +519,9 @@ class ComputeNode:
                 if nxt is _STOP:
                     saw_stop = True
                     break
+                if isinstance(nxt, ReconfigMarker):
+                    self._compute_pending = nxt    # fence: no merging across
+                    break
                 if isinstance(nxt, BatchEnvelope):
                     self._to_encode.put(nxt)
                     continue
@@ -374,8 +532,8 @@ class ComputeNode:
                 group.extend(nxt)
                 n_parts += add
             with self._stats_lock:
-                self.queue_depths.append(n_parts + self.inbox.qsize()
-                                         + self._to_compute.qsize())
+                self._record_depth(n_parts + self.inbox.qsize()
+                                   + self._to_compute.qsize())
             t0 = time.perf_counter()
             out, failures = self._compute_group(group)
             with self._stats_lock:
@@ -387,6 +545,30 @@ class ComputeNode:
             if saw_stop:
                 self._to_encode.put(_STOP)
                 return
+
+    def _pad_to_bucket(self, d: _Decoded) -> _Decoded:
+        """Zero-pad a decoded segment's middle axes up to the pow2 bucket
+        sizes, recording each extent's ORIGINAL sizes the first time it is
+        padded (later hops see already-pow2 shapes, so padding there is a
+        no-op and the original trim is preserved).
+
+        One ``pad_trim`` describes every leaf of the request, so a
+        boundary whose leaves disagree on middle-axis sizes (e.g. a cut
+        crossed by several pass-through activations) is left unpadded —
+        it falls back to exact bucketing rather than risking a trim that
+        slices real rows off a sibling leaf."""
+        mids = {tuple(v.shape[1:-1]) for v in d.boundary.values()
+                if v.ndim > 2}
+        if len(mids) != 1:
+            return d
+        padded = {k: _pad_middle(v) for k, v in d.boundary.items()}
+        if all(padded[k] is d.boundary[k] for k in padded):
+            return d
+        orig_mid = next(iter(mids))
+        extents = [e if e.pad_trim is not None
+                   else dataclasses.replace(e, pad_trim=orig_mid)
+                   for e in d.extents]
+        return _Decoded(extents, padded, d.deserialize_s)
 
     def _stack_apply(self, segments: list[dict[str, np.ndarray]],
                      total: int, target: int) -> tuple[dict[str, np.ndarray], float]:
@@ -412,7 +594,15 @@ class ComputeNode:
 
         A bucket whose apply raises becomes an error envelope for exactly
         its own extents; sibling buckets in the merged group still return
-        their results."""
+        their results.
+
+        With ``shape_buckets='pow2'``, near-miss trailing shapes are first
+        zero-padded along their middle axes to the bucket's power-of-two
+        sizes, so e.g. ragged sequence lengths merge into ONE apply instead
+        of one bucket each; the original sizes ride the extents
+        (``pad_trim``) and the tail collector trims them back out."""
+        if self.shape_buckets == "pow2":
+            group = [self._pad_to_bucket(d) for d in group]
         n = sum(len(d.extents) for d in group)
         des_s = sum(d.deserialize_s for d in group)
         buckets: dict[tuple, list[_Decoded]] = {}
@@ -452,7 +642,8 @@ class ComputeNode:
                 if self.next_inbox is not None:
                     self.next_inbox.put(_STOP)
                 return
-            if isinstance(item, BatchEnvelope):  # error passthrough
+            if isinstance(item, (BatchEnvelope, ReconfigMarker)):
+                # error passthrough / epoch fence: relay in order
                 if self.next_inbox is not None:
                     self.next_inbox.put(item)
                 continue
@@ -477,7 +668,7 @@ class ComputeNode:
                 out_envs.append(env)
             with self._stats_lock:
                 self.busy_encode_s += enc_busy
-                self.traces.append(item.trace)
+                self._record_trace(item.trace)
             if self.next_inbox is not None:
                 for env in out_envs:
                     self.next_inbox.put(env)
@@ -494,8 +685,14 @@ class ComputeNode:
                 if self.next_inbox is not None:
                     self.next_inbox.put(_STOP)
                 return
+            if isinstance(item, ReconfigMarker):
+                self._apply_reconfig(item)
+                if self.next_inbox is not None:
+                    self.next_inbox.put(item)
+                continue
             batch = [item]
             saw_stop = False
+            marker = None
             while sum(e.n for e in batch) < self.max_batch:
                 try:
                     nxt = self.inbox.get_nowait()
@@ -504,13 +701,20 @@ class ComputeNode:
                 if nxt is _STOP:
                     saw_stop = True
                     break
+                if isinstance(nxt, ReconfigMarker):
+                    marker = nxt         # fence: swap after this batch
+                    break
                 batch.append(nxt)
             with self._stats_lock:
-                self.queue_depths.append(len(batch) + self.inbox.qsize())
+                self._record_depth(len(batch) + self.inbox.qsize())
             outs = self.process_batch(batch)
             if self.next_inbox is not None:
                 for env in outs:
                     self.next_inbox.put(env)
+            if marker is not None:
+                self._apply_reconfig(marker)
+                if self.next_inbox is not None:
+                    self.next_inbox.put(marker)
             if saw_stop:
                 if self.next_inbox is not None:
                     self.next_inbox.put(_STOP)
@@ -583,7 +787,7 @@ class ComputeNode:
         with self._stats_lock:
             self.busy_compute_s += compute_total
             self.busy_encode_s += ser_total
-            self.traces.append(BatchTrace(
+            self._record_trace(BatchTrace(
                 self.index, len(samples), padded_rows, des_total,
                 compute_total, ser_total, payload_total, encodes=encodes))
         return out_envs

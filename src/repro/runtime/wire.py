@@ -83,6 +83,10 @@ class RowExtent:
     seq: int                    # submission index within client
     rows: int                   # this request's rows in the stacked tensor
     t_submit: float = 0.0       # admission timestamp (perf_counter)
+    # set when bucketed pad-to-shape merged this request into a wider
+    # bucket: the ORIGINAL middle-axis sizes (everything between axis 0
+    # and the last axis) the collector trims results back to
+    pad_trim: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -108,13 +112,54 @@ class BatchEnvelope:
 
 def slice_parts(flat: dict[str, np.ndarray],
                 extents: list[RowExtent]) -> list[dict[str, np.ndarray]]:
-    """Invert batch stacking: one {name: array} view per extent (no copy)."""
+    """Invert batch stacking: one {name: array} view per extent (no copy).
+
+    An extent carrying ``pad_trim`` was zero-padded along its middle axes
+    to merge into a wider shape bucket; its leaves are trimmed back to the
+    original sizes here (rank-preserving layers only — a leaf whose rank
+    no longer matches the recorded trim is passed through untouched)."""
     parts = []
     off = 0
     for e in extents:
-        parts.append({k: v[off:off + e.rows] for k, v in flat.items()})
+        part = {k: v[off:off + e.rows] for k, v in flat.items()}
+        if e.pad_trim is not None:
+            trim = tuple(slice(0, s) for s in e.pad_trim)
+            part = {k: (v[(slice(None),) + trim]
+                        if v.ndim == len(e.pad_trim) + 2 else v)
+                    for k, v in part.items()}
+        parts.append(part)
         off += e.rows
     return parts
+
+
+@dataclasses.dataclass
+class NodePlan:
+    """One node's share of a live repartition: its new layer range, the
+    wire-encoded architecture spec, and the weights of only the layers it
+    GAINS (weight-diff shipping — layers it keeps never travel again)."""
+
+    lo: int
+    hi: int
+    arch_blob: bytes
+    weights_blob: bytes                 # gained layers only; b"" if none
+    weights_codec: "WireCodec"
+    wire_bytes: int = 0                 # len(arch) + len(weights) on the wire
+
+
+@dataclasses.dataclass
+class ReconfigMarker:
+    """The epoch fence for a live repartition.
+
+    Injected at the head of the chain and relayed hop-by-hop IN ORDER with
+    the data envelopes: every envelope ahead of the marker is processed by
+    the old partition at every node, every envelope behind it by the new
+    one — each node swaps exactly when the marker passes its compute
+    stage, so no in-flight request ever sees a mixed chain and none is
+    dropped or recomputed.  The tail collector observes the marker to
+    acknowledge the epoch switch chain-wide."""
+
+    epoch: int
+    plans: dict[int, NodePlan]          # node index -> its new assignment
 
 
 @dataclasses.dataclass(frozen=True)

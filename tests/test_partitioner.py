@@ -12,8 +12,9 @@ except ImportError:      # network-less CI image: degrade to fixed examples
     from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import LayerGraph
-from repro.core.partitioner import (ComputeModel, LinkModel,
-                                    _linear_partition_dp, partition)
+from repro.core.partitioner import (CalibratedCosts, ComputeModel, LinkModel,
+                                    _linear_partition_dp, bounds_bottleneck,
+                                    calibrated_partition, partition)
 
 
 def chain_graph(flops, out_elems=None):
@@ -137,6 +138,89 @@ def test_cut_cost_counts_pass_through():
     assert "a" in g.crossing_names(0)
     assert set(g.crossing_names(1)) == {"a", "b"}   # a passes through stage 2
     assert g.cut_cost(1) == 2 * 8 * 4
+
+
+def test_explicit_cuts_override_strategy():
+    g = chain_graph([1e6] * 8)
+    p = partition(g, 3, cuts=(5, 7))
+    assert p.ranges() == [(0, 5), (5, 7), (7, 8)]
+    for bad in ((5,), (0, 4), (4, 8), (4, 4)):
+        with pytest.raises(ValueError):
+            partition(g, 3, cuts=bad)
+
+
+def _costs(layer_s, bytes_=4.0, enc=0.0, dec=0.0):
+    n = len(layer_s)
+    return CalibratedCosts(
+        layer_s=np.asarray(layer_s, np.float64),
+        cut_bytes=np.full(n, bytes_), encode_s_per_byte=enc,
+        decode_s_per_byte=dec, head_in_bytes=bytes_, tail_out_bytes=bytes_)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.01, 10.0), min_size=3, max_size=9),
+       st.integers(2, 4))
+def test_calibrated_dp_optimal_vs_brute_force(w, k):
+    """The staged (max-of-stage-times) DP matches brute force."""
+    if k > len(w):
+        k = len(w)
+    costs = _costs(w, enc=0.05, dec=0.03)
+    bounds, got = calibrated_partition(costs, k)
+    assert got == pytest.approx(bounds_bottleneck(costs, bounds))
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, len(w)), k - 1):
+        best = min(best, bounds_bottleneck(costs, [0, *cuts, len(w)]))
+    assert got <= best + 1e-12
+
+
+def test_warm_start_window_bounds_migration_size():
+    """The warm-started DP shifts no boundary further than ``window``
+    layers from the current cuts — the cap on weights a live migration
+    ships — and still improves the bottleneck monotonically."""
+    layer_s = [8.0] + [1.0] * 11               # heavy head layer
+    costs = _costs(layer_s)
+    cur = [0, 6, 9, 12]                        # skewed start
+    full, full_b = calibrated_partition(costs, 3)
+    windowed, win_b = calibrated_partition(costs, 3, prev_bounds=cur,
+                                           window=2)
+    for j in (1, 2):
+        assert abs(windowed[j] - cur[j]) <= 2
+    assert win_b <= bounds_bottleneck(costs, cur) + 1e-12
+    assert full_b <= win_b + 1e-12             # full search at least as good
+    # iterating windowed steps converges to the full optimum
+    b = cur
+    for _ in range(6):
+        b, _ = calibrated_partition(costs, 3, prev_bounds=b, window=2)
+    assert bounds_bottleneck(costs, b) == pytest.approx(full_b)
+
+
+def test_warm_start_infeasible_window_falls_back():
+    """A window too tight to form k non-empty stages falls back to the
+    full search instead of failing.  Degenerate prev bounds (an empty
+    stage, e.g. handed down from a different stage count) with window=0
+    make every windowed plan infeasible, so this genuinely drives the
+    dp[k][n] == INF fallback branch."""
+    costs = _costs([1.0] * 6)
+    bounds, got = calibrated_partition(costs, 3, prev_bounds=[0, 1, 1, 6],
+                                       window=0)
+    full, full_b = calibrated_partition(costs, 3)
+    assert bounds == full and got == pytest.approx(full_b)
+    assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
+    # a valid window solves in-window without falling back
+    wb, _ = calibrated_partition(costs, 3, prev_bounds=[0, 1, 2, 6],
+                                 window=0)
+    assert wb == [0, 1, 2, 6]
+
+
+def test_calibrated_staged_prefers_overlap_aware_cuts():
+    """Staged pricing is max(dec, cmp, enc), not the sum: a plan that
+    equalizes stage compute at ~codec cost is optimal even though the
+    sequential model would say codec makes it worse."""
+    costs = _costs([1.0] * 8, bytes_=4.0, enc=0.25, dec=0.25)
+    bounds, got = calibrated_partition(costs, 4, staged=True)
+    assert got == pytest.approx(2.0)           # 2 layers/stage, codec hidden
+    seq = bounds_bottleneck(costs, bounds, staged=False)
+    assert seq > got                           # overlap is what buys it
 
 
 def test_resnet_partition_reassembly_exact():
