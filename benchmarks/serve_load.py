@@ -25,14 +25,30 @@ knobs; ``controller`` starts from the SAME bad plan and lets the feedback
 controller calibrate real costs, hot-migrate the cuts behind an epoch
 fence (zero requests dropped), and adapt max_batch / coalesce_s online.
 
+Elastic scenario (``run_elastic``, ISSUE 4): a 2-stage topology whose
+stage 0 is a single widening layer that must ENCODE a 16x-wide activation
+for the hop — with ZFP/LZ4 that encode saturates the stage (its egress
+measures ~0.98 busy) while the decode side is ~6x cheaper, so stage 0 is
+the bottleneck and the cut CANNOT move to fix it (one layer is already
+minimal).  Replicas are the only lever: serving starts with 1 replica on
+the bottleneck stage and ``Engine.scale()``s it to 2..N **under
+closed-loop load** (the epoch fence keeps zero requests dropped —
+asserted, every in-flight future must resolve); each membership is then
+measured.  The codec is single-threaded per replica, so replication
+parallelizes the wire encode — the honest in-process analogue of SEIFER
+replicating a bottleneck partition across devices.  Results (throughput
+before/after, dropped counts) land in BENCH_elastic.json.
+
 Acceptance bars: async >= 1.5x sync (ISSUE 1, raw codec), staged >= 1.5x
-async with zfp/q8 at >= 4 nodes x 8 clients (ISSUE 2), and controller >=
-1.3x static on the skewed chain with ZFP/LZ4 (ISSUE 3).
+async with zfp/q8 at >= 4 nodes x 8 clients (ISSUE 2), controller >=
+1.3x static on the skewed chain with ZFP/LZ4 (ISSUE 3), and replicated
+bottleneck measurably above the 1-replica plan with zero drops (ISSUE 4).
 
     PYTHONPATH=src python benchmarks/serve_load.py --nodes 4 --clients 8 \
         --codec zfp --min-staged-speedup 1.5
     PYTHONPATH=src python benchmarks/serve_load.py --rebalance \
         --codec zfp_lz4 --min-rebalance-speedup 1.3
+    PYTHONPATH=src python benchmarks/serve_load.py --elastic
     PYTHONPATH=src python benchmarks/serve_load.py --smoke
 """
 from __future__ import annotations
@@ -64,7 +80,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.graph import LayerGraph
-from repro.runtime import ControllerConfig, InferenceEngine
+from repro.runtime import ControllerConfig, InferenceEngine, TopologySpec
 from repro.runtime.dispatcher import DispatcherCodecs
 from repro.runtime.wire import WireCodec
 
@@ -136,11 +152,13 @@ def sample(i: int, seq: int = SEQ, d: int = D) -> np.ndarray:
     return rng.normal(size=(1, seq, d)).astype(np.float32)
 
 
-def build_engine(g: LayerGraph, params, nodes: int, max_batch: int,
+def build_engine(g: LayerGraph, params, topology, max_batch: int,
                  clients: int, codec: WireCodec, staged: bool,
                  **engine_kw) -> InferenceEngine:
+    """``topology``: a TopologySpec, or an int for the classic 1-replica
+    equal_layers chain (TopologySpec.chain sugar)."""
     eng = InferenceEngine(
-        g, nodes,
+        g, topology,
         DispatcherCodecs(data=codec, weights=WireCodec("raw", "none")),
         max_batch=max_batch, admission_depth=max(16, 4 * clients),
         staged=staged, **engine_kw)
@@ -306,8 +324,9 @@ def run_rebalance(nodes: int = 4, clients: int = 8, samples: int = 16,
     wire = CODECS[codec]
     rows = []
 
-    eng = build_engine(g, params, nodes, 8, clients, wire, True,
-                       strategy="equal_layers")
+    # int topology = TopologySpec.chain(g, nodes): the paper's 1-replica
+    # equal_layers chain — the deliberately bad static plan
+    eng = build_engine(g, params, nodes, 8, clients, wire, True)
     static_cuts = tuple(eng.dispatcher.partition.cuts)
     warmup(eng, clients, seq, narrow)
     wall, rep, errs = _measure(eng, clients, samples, seq, narrow, repeats)
@@ -319,8 +338,7 @@ def run_rebalance(nodes: int = 4, clients: int = 8, samples: int = 16,
                            cooldown_s=1.0, hysteresis=0.25,
                            ewma_alpha=0.5)
     eng = build_engine(g, params, nodes, 8, clients, wire, True,
-                       strategy="equal_layers", max_batch_cap=32,
-                       controller=cfg)
+                       max_batch_cap=32, controller=cfg)
     warmup(eng, clients, seq, narrow)
     # convergence phase: serve until the controller commits a migration
     # (epoch > 0) — the untimed analogue of a warmed-up production chain
@@ -384,12 +402,189 @@ def run_rebalance(nodes: int = 4, clients: int = 8, samples: int = 16,
     }
 
 
+# -- ISSUE 4: elastic membership on the bottleneck stage ----------------------
+
+def _pound_while(eng, clients: int, seq: int, d: int, action,
+                 settle_s: float = 0.2) -> tuple[dict, list, int]:
+    """Closed-loop background load; run ``action()`` mid-flight; stop.
+    Returns (action result, errors, requests completed) — the errors list
+    must stay empty for the zero-dropped claim."""
+    errors: list = []
+    done = [0] * clients
+    stop = threading.Event()
+
+    def pound(c: int) -> None:
+        i = 0
+        try:
+            while not stop.is_set():
+                eng.submit(sample(777_000 + 1000 * c + i, seq, d),
+                           client_id=("bg", c)).result(timeout=120)
+                done[c] += 1
+                i += 1
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=pound, args=(c,))
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+    time.sleep(settle_s)                        # real in-flight traffic
+    rec = action()
+    time.sleep(settle_s)                        # post-fence traffic too
+    stop.set()
+    for t in threads:
+        t.join()
+    return rec, errors, sum(done)
+
+
+def elastic_chain(narrow: int = 64, wide: int = 1024, seq: int = SEQ,
+                  tail: int = 3) -> LayerGraph:
+    """A chain built to have an UNSPLITTABLE codec-bound bottleneck: fc0
+    widens narrow -> wide (stage 0, one layer, so no thinner cut exists),
+    the first hop carries the wide activation (stage 0 must encode it),
+    and the tail immediately narrows back so every other hop is cheap."""
+    g = LayerGraph("elastic-chain",
+                   jax.ShapeDtypeStruct((1, seq, narrow), np.float32))
+    dims = [narrow, wide] + [narrow] * tail
+    prev = ""
+    for i, (din, dout) in enumerate(zip(dims, dims[1:])):
+        g.layer(f"fc{i}",
+                lambda p, x: jnp.tanh(x @ p["w"]),
+                {"w": jax.ShapeDtypeStruct((din, dout), np.float32)},
+                (prev,),
+                jax.ShapeDtypeStruct((1, seq, dout), np.float32),
+                flops=2.0 * seq * din * dout)
+        prev = f"fc{i}"
+    return g
+
+
+def run_elastic(clients: int = 24, samples: int = 8,
+                codec: str = "zfp_lz4", repeats: int = 2,
+                narrow: int = 64, wide: int = 1024, seq: int = SEQ,
+                max_replicas: int = 3) -> dict:
+    """1 -> N replicas on the bottleneck stage, scaled under load.
+
+    Stage 0 is one widening layer whose egress ENCODES the wide
+    activation: with ZFP/LZ4 that encode saturates the stage (~0.98 busy
+    measured) while the receiving decode is ~6x cheaper, and the cut
+    cannot move (a single layer is already minimal) — exactly the
+    situation where the controller's replica dimension (and this
+    scenario's explicit ``scale()``) is the remaining lever.  The numpy
+    codec is single-threaded per replica, so replicas genuinely
+    parallelize the wire encode.
+
+    Closed-loop clients must OVERSUBSCRIBE the 1-replica capacity
+    (default 24): replication raises a stage's service *rate*, never a
+    request's own latency, so an unsaturated closed loop would measure no
+    change by construction."""
+    g = elastic_chain(narrow, wide, seq)
+    d = narrow
+    params = g.init(jax.random.PRNGKey(0))
+    wire = CODECS[codec]
+    spec = TopologySpec.chain(g, 2, cuts=(1,))
+    eng = build_engine(g, params, spec, 8, clients, wire, True)
+    bottleneck = 0                              # the wide-encoding stage
+    warmup(eng, clients, seq, d)
+
+    rows = []
+    scale_recs = []
+
+    def measure(label: str) -> None:
+        wall, rep, errs = _measure(eng, clients, samples, seq, d, repeats)
+        assert not errs, errs
+        row = _row(label, wall, rep, sum(rep.replicas), clients, samples)
+        row["replicas"] = "x".join(map(str, rep.replicas))
+        rows.append(row)
+
+    # membership ladder 1 -> 2 -> .. -> N -> 1: measuring the 1-replica
+    # plan at BOTH ends and taking its best window makes the baseline
+    # symmetric to box drift over the minutes the run takes, and the
+    # final step exercises DRAIN under load in the recorded benchmark
+    ladder = list(range(2, max_replicas + 1)) + [1]
+    measure("replicas=1")
+    for n in ladder:
+        # the scale itself happens UNDER closed-loop load: the epoch
+        # fence must lose nothing while membership changes.  precompile
+        # traces the spawned replicas' batch shapes BEFORE they join the
+        # routing set — a cold replica would otherwise serve its first
+        # waves through XLA compiles and read as slower than no replica
+        rec, errs, completed = _pound_while(
+            eng, clients, seq, d,
+            lambda n=n: eng.scale(bottleneck, n, precompile=True))
+        # zero-drop is ASSERTED, not sampled: any client error during a
+        # live scale aborts the benchmark instead of being counted
+        assert not errs, errs
+        rec["requests_during_scale"] = completed
+        scale_recs.append(rec)
+        measure(f"replicas={n}" + ("-drained" if n == 1 else ""))
+    eng.shutdown()
+
+    base = max(r["throughput_rps"] for r in rows
+               if r["mode"].startswith("replicas=1"))
+    for r in rows:
+        r["speedup_vs_1_replica"] = (r["throughput_rps"] / base
+                                     if base > 0 else 0.0)
+    best = max((r for r in rows if not r["mode"].startswith("replicas=1")),
+               key=lambda r: r["throughput_rps"])
+    emit("serve_elastic", rows)
+    return {
+        "config": {"clients": clients, "samples_per_client": samples,
+                   "codec": codec,
+                   "model": f"elastic-chain narrow={narrow} wide={wide} "
+                            f"seq={seq}",
+                   "topology": f"2 stages, cut after layer 1 (stage 0 = "
+                               f"the single widening layer encoding the "
+                               f"{wide}-wide hop), scale stage "
+                               f"{bottleneck} 1->{max_replicas}",
+                   "protocol": "membership ladder 1->2->..->N->1, each "
+                               "scale() executed under closed-loop load "
+                               "(zero-drop asserted on every in-flight "
+                               "future), best-of-N measured windows per "
+                               "membership; baseline = best 1-replica "
+                               "window from either end of the ladder "
+                               "(drift-symmetric)"},
+        "rows": rows,
+        "scales": scale_recs,
+        "speedup": best["speedup_vs_1_replica"],
+        "best_replicas": best["replicas"],
+        "zero_dropped": True,   # asserted: any drop aborts the run above
+        "notes": [
+            "Stage 0 is a single layer, so no cut migration can shrink "
+            "it: the wide-hop encode it pays is irreducible by the DP, "
+            "which isolates the replica dimension.",
+            "Each scale() rides the epoch fence: spawned replicas are "
+            "configured over the wire with the stage's full weights and "
+            "fenced into the routing set; every request in flight during "
+            "the fence resolves (asserted, not sampled).",
+            "Host ceiling: this container has 2 cores and one XLA apply "
+            "already spends ~1.3 of them (two concurrent jitted GEMM "
+            "loops aggregate only ~1.33x one loop, measured), so "
+            "compute-bound stages cannot demonstrate replication "
+            "in-process; the codec-bound stage can because the numpy "
+            "codec is strictly single-threaded per replica.  LZ4's "
+            "Python-level match loops still serialize part of each "
+            "encode under the GIL, which is why 2-3 replicas land at "
+            "~1.2-1.5x rather than 2-3x; on separate devices (the "
+            "paper's setting) the same fence/routing machinery scales "
+            "with the hardware.",
+        ],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=4)
-    ap.add_argument("--clients", type=int, default=8)
-    ap.add_argument("--samples", type=int, default=16)
-    ap.add_argument("--codec", choices=sorted(CODECS), default="zfp")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="closed-loop clients (default 8; 24 for "
+                         "--elastic, which must oversubscribe the "
+                         "1-replica capacity to see a rate change)")
+    ap.add_argument("--samples", type=int, default=None,
+                    help="samples per client (default 16; 8 for "
+                         "--elastic)")
+    ap.add_argument("--codec", choices=sorted(CODECS), default=None,
+                    help="wire codec (default zfp; zfp_lz4 for --elastic, "
+                         "whose bottleneck is the asymmetric wide-hop "
+                         "encode)")
     ap.add_argument("--repeats", type=int, default=2,
                     help="measured windows per mode; fastest is reported")
     ap.add_argument("--min-speedup", type=float, default=0.0,
@@ -401,6 +596,12 @@ def main() -> None:
     ap.add_argument("--min-rebalance-speedup", type=float, default=0.0,
                     help="exit nonzero if controller/static < this "
                          "(ISSUE 3 bar)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="run the ISSUE 4 replica-elasticity scenario "
+                         "(scale the bottleneck stage 1->3 under load)")
+    ap.add_argument("--min-elastic-speedup", type=float, default=0.0,
+                    help="exit nonzero if best-replicated/1-replica < "
+                         "this (ISSUE 4 bar)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny raw-codec config (seconds): plumbing gate "
                          "for CI, including one live reconfiguration")
@@ -420,14 +621,60 @@ def main() -> None:
         # forced smoke fence) and lost nothing — this is the plumbing the
         # CI gate exists to catch
         assert res["rows"][1]["epoch"] >= 1, res["rows"][1]
+        # the elastic plumbing too: spawn + drain a replica under load
+        # (tiny config, seconds) with zero dropped requests
+        eres = run_elastic(clients=2, samples=3, codec="raw", repeats=1,
+                           narrow=16, wide=64, seq=16, max_replicas=2)
+        assert eres["zero_dropped"], eres
+        # the ladder went 1 -> 2 -> 1: a spawn AND a drain both fenced
+        # through a loaded chain
+        assert any(r["replicas"] == "2x1" for r in eres["rows"]), eres
+        assert eres["rows"][-1]["replicas"] == "1x1", eres["rows"][-1]
+        assert eres["rows"][-1]["epoch"] == 2, eres["rows"][-1]
         print(f"smoke ok: staged {rows[-1]['throughput_rps']:.1f} req/s, "
               f"rebalance epoch {res['rows'][1]['epoch']}, "
-              f"controller {res['rows'][1]['throughput_rps']:.1f} req/s")
+              f"controller {res['rows'][1]['throughput_rps']:.1f} req/s, "
+              f"elastic {eres['rows'][0]['throughput_rps']:.1f} -> "
+              f"{eres['rows'][-1]['throughput_rps']:.1f} req/s")
+        return
+
+    if args.elastic:
+        res = run_elastic(args.clients or 24, args.samples or 8,
+                          args.codec or "zfp_lz4", args.repeats)
+        res = {"benchmark": "benchmarks/serve_load.py --elastic",
+               "date": time.strftime("%Y-%m-%d"),
+               "host": f"{os.cpu_count()}-core CPU container, "
+                       f"jax {jax.__version__} cpu, XLA intra_op=1, "
+                       "cpu async dispatch off",
+               "acceptance": {
+                   "bar": "a replicated bottleneck stage yields measurably "
+                          "higher throughput than the 1-replica plan, with "
+                          "zero requests dropped during the live scale()s",
+                   "result": f"{'PASS' if res['speedup'] > 1.0 and res['zero_dropped'] else 'FAIL'}"
+                             f" at {res['speedup']:.2f}x "
+                             f"({res['best_replicas']} replicas), "
+                             f"zero_dropped (asserted)",
+               },
+               **res}
+        with open("BENCH_elastic.json", "w") as f:
+            json.dump(res, f, indent=2, default=str)
+        print(f"elastic speedup: {res['speedup']:.2f}x at "
+              f"{res['best_replicas']} replicas (zero dropped: asserted)")
+        for r in res["rows"]:
+            print(f"  {r['mode']:<12} {r['throughput_rps']:6.1f} req/s  "
+                  f"p50 {r['p50_ms']:6.1f} ms  "
+                  f"({r['speedup_vs_1_replica']:.2f}x)")
+        if args.min_elastic_speedup \
+                and res["speedup"] < args.min_elastic_speedup:
+            raise SystemExit(
+                f"elastic speedup {res['speedup']:.2f}x < required "
+                f"{args.min_elastic_speedup}x")
         return
 
     if args.rebalance:
-        res = run_rebalance(args.nodes, args.clients, args.samples,
-                            args.codec, args.repeats)
+        res = run_rebalance(args.nodes, args.clients or 8,
+                            args.samples or 16, args.codec or "zfp_lz4",
+                            args.repeats)
         res = {"benchmark": "benchmarks/serve_load.py --rebalance",
                "date": time.strftime("%Y-%m-%d"),
                "host": f"{os.cpu_count()}-core CPU container, "
@@ -456,8 +703,8 @@ def main() -> None:
                 f"{args.min_rebalance_speedup}x")
         return
 
-    rows = run(args.nodes, args.clients, args.samples, args.codec,
-               args.repeats)
+    rows = run(args.nodes, args.clients or 8, args.samples or 16,
+               args.codec or "zfp", args.repeats)
     emit("serve_load", rows)
     by_mode = {r["mode"]: r for r in rows}
     s_async = by_mode["async"]["speedup_vs_sync"]

@@ -49,6 +49,13 @@ class LayerNode:
     out_spec: jax.ShapeDtypeStruct         # activation this node emits
     flops: float                           # fwd FLOPs for one sample batch
     meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # True iff this layer preserves its middle axes and acts independently
+    # along them (token-wise MLP/FFN, norms, elementwise): the runtime may
+    # then zero-pad those axes to merge near-miss shapes into one batch
+    # bucket.  Layers that mix positions (attention over the padded axis,
+    # pooling with edge effects) must set False — a serving segment
+    # containing any pad-unsafe layer falls back to exact bucketing.
+    pad_safe: bool = True
 
     @property
     def param_bytes(self) -> int:
@@ -86,9 +93,11 @@ class LayerGraph:
         self._by_name[node.name] = node
         return node.name
 
-    def layer(self, name: str, fn, param_spec, inputs, out_spec, flops, **meta):
+    def layer(self, name: str, fn, param_spec, inputs, out_spec, flops,
+              pad_safe: bool = True, **meta):
         return self.add(
-            LayerNode(name, fn, param_spec, tuple(inputs), out_spec, flops, meta)
+            LayerNode(name, fn, param_spec, tuple(inputs), out_spec, flops,
+                      meta, pad_safe=pad_safe)
         )
 
     def __len__(self) -> int:

@@ -74,12 +74,23 @@ class StageCost:
     out_bytes: int              # activation bytes crossing the outbound cut
     compute_time_s: float = 0.0
     transfer_time_s: float = 0.0
+    replicas: int = 1           # identical nodes serving this stage
 
     @property
     def service_time_s(self) -> float:
         # A DEFER node can't accept sample t+1 until it computed AND relayed
         # sample t (single socket thread pair) -> service = compute + transfer.
+        # This is the PER-REQUEST time: replicating the stage does not make
+        # any single request faster.
         return self.compute_time_s + self.transfer_time_s
+
+    @property
+    def throughput_service_s(self) -> float:
+        """The stage's effective contribution to the pipeline bottleneck:
+        ``replicas`` identical nodes each take a 1/replicas share of the
+        request stream, so compute and codec/transfer amortize — but only
+        for throughput, never for a request's own latency."""
+        return self.service_time_s / self.replicas
 
 
 @dataclasses.dataclass
@@ -94,7 +105,19 @@ class Partition:
 
     @property
     def bottleneck_s(self) -> float:
+        """Max per-request stage service time (replica-blind: the paper's
+        single-node-per-partition law)."""
         return max(s.service_time_s for s in self.stages)
+
+    @property
+    def throughput_bottleneck_s(self) -> float:
+        """Max replica-amortized stage service time — what actually bounds
+        steady-state throughput on a replicated topology."""
+        return max(s.throughput_service_s for s in self.stages)
+
+    @property
+    def replicas(self) -> tuple[int, ...]:
+        return tuple(s.replicas for s in self.stages)
 
     def ranges(self) -> list[tuple[int, int]]:
         return [(s.start, s.stop) for s in self.stages]
@@ -113,8 +136,8 @@ def _computes(compute, num_stages: int) -> list[ComputeModel]:
 
 
 def _stage_costs(graph: LayerGraph, bounds: Sequence[int],
-                 link: LinkModel, computes: list[ComputeModel]
-                 ) -> list[StageCost]:
+                 link: LinkModel, computes: list[ComputeModel],
+                 replicas: Sequence[int] | None = None) -> list[StageCost]:
     stages: list[StageCost] = []
     for si in range(len(bounds) - 1):
         lo, hi = bounds[si], bounds[si + 1]
@@ -122,7 +145,8 @@ def _stage_costs(graph: LayerGraph, bounds: Sequence[int],
         flops = sum(n.flops for n in nodes)
         pbytes = sum(n.param_bytes for n in nodes)
         obytes = graph.cut_cost(hi - 1) if hi < len(graph.nodes) else nodes[-1].out_bytes
-        st = StageCost(lo, hi, flops, pbytes, obytes)
+        st = StageCost(lo, hi, flops, pbytes, obytes,
+                       replicas=replicas[si] if replicas else 1)
         st.compute_time_s = computes[si].compute_time(flops)
         st.transfer_time_s = link.transfer_time(obytes)
         stages.append(st)
@@ -133,7 +157,8 @@ def partition(graph: LayerGraph, num_stages: int,
               strategy: Strategy = "balanced_latency",
               link: LinkModel | None = None,
               compute: "ComputeModel | Sequence[ComputeModel] | None" = None,
-              cuts: Sequence[int] | None = None) -> Partition:
+              cuts: Sequence[int] | None = None,
+              replicas: Sequence[int] | None = None) -> Partition:
     """Cut ``graph`` into ``num_stages`` contiguous partitions.
 
     ``compute`` may be a sequence of per-node models (heterogeneous edge
@@ -144,6 +169,12 @@ def partition(graph: LayerGraph, num_stages: int,
     ``cuts`` overrides the strategy with explicit interior cut indices
     (cut after layer ``c``): how a dispatcher rebuilds its Partition after
     a live repartition, and how benchmarks pin a deliberately bad plan.
+
+    ``replicas`` records per-stage replica counts: stage costs price the
+    throughput bottleneck as (compute + transfer) / replicas — replication
+    amortizes a stage's service RATE, never a single request's latency.
+    The strategies themselves still place cuts per-request; the serving
+    controller owns the replica dimension.
     """
     link = link or LinkModel()
     computes = _computes(compute or ComputeModel(), num_stages)
@@ -186,7 +217,10 @@ def partition(graph: LayerGraph, num_stages: int,
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
 
-    stages = _stage_costs(graph, bounds, link, computes)
+    if replicas is not None and len(replicas) != num_stages:
+        raise ValueError(f"{len(replicas)} replica counts for "
+                         f"{num_stages} stages")
+    stages = _stage_costs(graph, bounds, link, computes, replicas)
     return Partition(graph.name, tuple(bounds[1:-1]), stages)
 
 
@@ -291,13 +325,17 @@ class CalibratedCosts:
         # serving
         self._prefix = np.concatenate([[0.0], np.cumsum(self.layer_s)])
 
-    def stage_service_s(self, lo: int, hi: int, staged: bool = True) -> float:
+    def stage_service_s(self, lo: int, hi: int, staged: bool = True,
+                        replicas: int = 1) -> float:
         """Predicted service time of a stage covering layers [lo, hi).
 
         A staged node overlaps its decode / compute / encode threads, so
         its steady-state service rate is set by the *max* stage time
         (paper: throughput = 1 / max_i service_i); an unstaged node pays
-        the sum.
+        the sum.  ``replicas`` identical nodes split the request stream,
+        so compute and codec amortize by 1/replicas — for the stage's
+        service RATE, which is what this function prices; a request's own
+        latency through one replica is unchanged by its siblings.
         """
         in_b = self.head_in_bytes if lo == 0 else float(self.cut_bytes[lo - 1])
         out_b = (self.tail_out_bytes if hi == len(self.layer_s)
@@ -305,36 +343,45 @@ class CalibratedCosts:
         dec = self.decode_s_per_byte * in_b
         cmp = float(self._prefix[hi] - self._prefix[lo])
         enc = (self.encode_s_per_byte + self.wire_s_per_byte) * out_b
-        return max(dec, cmp, enc) if staged else dec + cmp + enc
+        per_req = max(dec, cmp, enc) if staged else dec + cmp + enc
+        return per_req / max(1, replicas)
 
 
 def bounds_bottleneck(costs: CalibratedCosts, bounds: Sequence[int],
-                      staged: bool = True) -> float:
+                      staged: bool = True,
+                      replicas: Sequence[int] | None = None) -> float:
     """Cost-delta API: predicted bottleneck service time of ANY cuts under
     the calibrated costs — price the current plan and a candidate with the
-    same ruler before paying for a live migration."""
-    return max(costs.stage_service_s(lo, hi, staged)
-               for lo, hi in zip(bounds, bounds[1:]))
+    same ruler before paying for a live migration.  ``replicas`` prices a
+    replicated topology (stage i's rate amortized by replicas[i])."""
+    return max(costs.stage_service_s(lo, hi, staged,
+                                     replicas[j] if replicas else 1)
+               for j, (lo, hi) in enumerate(zip(bounds, bounds[1:])))
 
 
 def calibrated_partition(costs: CalibratedCosts, num_stages: int,
                          staged: bool = True,
                          prev_bounds: Sequence[int] | None = None,
-                         window: int | None = None
+                         window: int | None = None,
+                         replicas: Sequence[int] | None = None
                          ) -> tuple[list[int], float]:
     """Re-run the partition DP on calibrated (measured) costs.
 
     Returns ``(bounds, predicted_bottleneck_s)``.  ``prev_bounds`` +
     ``window`` warm-start the DP around the live cuts (bounding both the
     search and the weight bytes a migration ships); infeasible windows
-    fall back to the full search.
+    fall back to the full search.  ``replicas`` makes the DP place cuts
+    for the CURRENT replicated topology: a 2-replica stage can profitably
+    hold twice the layers (its service rate halves), which a replica-blind
+    plan would miscount as the bottleneck.
     """
     n = len(costs.layer_s)
 
     def stage_cost(lo: int, hi: int, j: int) -> float:
-        return costs.stage_service_s(lo, hi, staged)
+        return costs.stage_service_s(lo, hi, staged,
+                                     replicas[j] if replicas else 1)
 
     bounds = _linear_partition_dp(
         costs.layer_s, np.zeros(n), num_stages, stage_cost=stage_cost,
         prev_bounds=prev_bounds, window=window)
-    return bounds, bounds_bottleneck(costs, bounds, staged)
+    return bounds, bounds_bottleneck(costs, bounds, staged, replicas)

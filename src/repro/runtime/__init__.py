@@ -1,9 +1,14 @@
 from repro.runtime.controller import (Controller,  # noqa: F401
                                       ControllerConfig, CostCalibrator,
-                                      decide_repartition, suggest_knobs)
+                                      decide_repartition, decide_scale,
+                                      suggest_knobs)
 from repro.runtime.dispatcher import (AdmissionFull,  # noqa: F401
                                       Dispatcher, DispatcherCodecs, NodeError)
 from repro.runtime.engine import EngineReport, InferenceEngine  # noqa: F401
+from repro.runtime.topology import StageSpec, TopologySpec  # noqa: F401
+from repro.runtime.transport import (Channel, InprocTransport,  # noqa: F401
+                                     Transport, get_transport,
+                                     register_transport)
 from repro.runtime.wire import (BatchEnvelope, Envelope,  # noqa: F401
                                 NodePlan, ReconfigMarker, RowExtent,
                                 WireCodec, WireRecord)

@@ -31,12 +31,23 @@ serving:
    switch with a :class:`~repro.runtime.wire.ReconfigMarker` epoch marker
    on the wire — zero in-flight requests are dropped or recomputed.
 
-4. **Adapt knobs** (:func:`suggest_knobs`): retune each node's
-   ``max_batch`` and ingress ``coalesce_s`` window from its measured
-   codec/compute stage-time ratio instead of the static 8 / 5 ms
-   defaults: a codec-bound node grows its coalescing window (bigger waves
-   = fewer codec passes, and compute is idle anyway), a compute-bound
-   node shrinks it back toward zero to cut queueing latency.
+4. **Adapt knobs** (:func:`suggest_knobs`): retune each stage's
+   ``max_batch`` and ingress ``coalesce_s`` window (uniformly across its
+   replicas) from its measured codec/compute stage-time ratio instead of
+   the static 8 / 5 ms defaults: a codec-bound stage grows its coalescing
+   window (bigger waves = fewer codec passes, and compute is idle anyway),
+   a compute-bound stage shrinks it back toward zero to cut queueing
+   latency.
+
+5. **Scale replicas** (:func:`decide_scale`): when the calibrated DP says
+   the bottleneck stage CANNOT be fixed by moving cuts (the repartition
+   arm holds), the controller prices the topology with the replica-aware
+   ruler (stage rate = per-request service / replicas) and recommends —
+   or, behind ``execute_scaling``, commits via ``Dispatcher.scale`` — a
+   replica change on the bottleneck stage; over-replicated stages shed a
+   replica symmetrically.  This is the SEIFER insight: past some point
+   the throughput win comes from replicating partitions, not re-cutting
+   them.
 
 The controller is deliberately conservative: it acts only on windows with
 enough requests, respects a cooldown between migrations, and every
@@ -78,6 +89,14 @@ class ControllerConfig:
     precompile_after_swap: bool = True # trace new shapes off the hot path
     model_wire: bool = False           # include modeled link time in costs
                                        # (False: in-process wire is free)
+    # the replica dimension: when cuts can't fix the bottleneck, recommend
+    # (replica_scaling) or commit (execute_scaling) a replica change
+    replica_scaling: bool = False      # enable the scale arm
+    execute_scaling: bool = False      # actually call Dispatcher.scale
+    max_replicas: int = 4              # per-stage replica ceiling
+    scale_up_ratio: float = 1.5        # bottleneck rate >= ratio * runner-up
+    scale_down_ratio: float = 2.0      # shed only when r-1 stays this far
+                                       # under the bottleneck
 
 
 @dataclasses.dataclass
@@ -185,19 +204,22 @@ class CostCalibrator:
 def decide_repartition(costs: CalibratedCosts, cur_bounds: Sequence[int],
                        num_stages: int, staged: bool = True,
                        hysteresis: float = 0.15,
-                       window: int | None = None) -> dict | None:
+                       window: int | None = None,
+                       replicas: Sequence[int] | None = None) -> dict | None:
     """Pure decision: is a migration worth it under the calibrated costs?
 
     Prices the CURRENT cuts and the DP's best candidate with the same
     calibrated ruler (the cost-delta API) and returns a decision record
     only when the predicted bottleneck improves by more than
     ``hysteresis`` — the deadband that keeps telemetry noise from
-    thrashing the chain with migrations.
+    thrashing the chain with migrations.  ``replicas`` prices both plans
+    for the live replicated topology (a 2-replica stage runs at half its
+    per-request time, so cuts should lean layers INTO it).
     """
-    cur_pred = bounds_bottleneck(costs, cur_bounds, staged)
+    cur_pred = bounds_bottleneck(costs, cur_bounds, staged, replicas)
     new_bounds, new_pred = calibrated_partition(
         costs, num_stages, staged=staged, prev_bounds=cur_bounds,
-        window=window)
+        window=window, replicas=replicas)
     if tuple(new_bounds) == tuple(cur_bounds):
         return None
     if new_pred >= cur_pred * (1.0 - hysteresis):
@@ -209,6 +231,56 @@ def decide_repartition(costs: CalibratedCosts, cur_bounds: Sequence[int],
         "predicted_new_s": new_pred,
         "predicted_gain": cur_pred / new_pred if new_pred > 0 else float("inf"),
     }
+
+
+def decide_scale(costs: CalibratedCosts, bounds: Sequence[int],
+                 replicas: Sequence[int], staged: bool = True,
+                 max_replicas: int = 4, up_ratio: float = 1.5,
+                 down_ratio: float = 2.0) -> dict | None:
+    """Pure decision: should a stage's replica count change?
+
+    Called only after :func:`decide_repartition` held — cuts alone cannot
+    fix the bottleneck.  Prices every stage's effective service RATE
+    (per-request time / replicas) under the calibrated costs:
+
+    * **up**: the bottleneck stage's rate is at least ``up_ratio`` x the
+      runner-up's — moving cuts already couldn't close that gap, so one
+      more replica on the bottleneck is the remaining lever (capped at
+      ``max_replicas``);
+    * **down**: a multi-replica stage that would STILL sit ``down_ratio``
+      x under the bottleneck with one replica fewer is over-provisioned —
+      shed one (throughput is set by the bottleneck; idle replicas only
+      burn energy, the paper's per-node metric).
+    """
+    ranges = list(zip(bounds, bounds[1:]))
+    eff = [costs.stage_service_s(lo, hi, staged, r)
+           for (lo, hi), r in zip(ranges, replicas)]
+    order = sorted(range(len(eff)), key=lambda i: eff[i], reverse=True)
+    b = order[0]
+    runner_up = eff[order[1]] if len(order) > 1 else 0.0
+    # no runner-up (single stage, or a ~free second stage) means no
+    # measured imbalance to justify a spawn — an unconditional up would
+    # grow an idle single-stage engine to max_replicas on pure cost noise
+    if (runner_up > 0.0 and replicas[b] < max_replicas
+            and eff[b] >= up_ratio * runner_up):
+        return {"stage": b, "replicas": replicas[b] + 1,
+                "direction": "up",
+                "predicted_stage_s": eff[b],
+                "predicted_after_s": eff[b] * replicas[b]
+                / (replicas[b] + 1),
+                "runner_up_s": runner_up}
+    for s in order[::-1]:                     # coldest stages first
+        r = replicas[s]
+        if s == b or r <= 1:
+            continue
+        shed = eff[s] * r / (r - 1)           # rate at r-1 replicas
+        if shed * down_ratio <= eff[b]:
+            return {"stage": s, "replicas": r - 1,
+                    "direction": "down",
+                    "predicted_stage_s": eff[s],
+                    "predicted_after_s": shed,
+                    "bottleneck_s": eff[b]}
+    return None
 
 
 def suggest_knobs(snap: dict, cap: int,
@@ -318,20 +390,49 @@ class Controller:
                  "busy_compute_s", "busy_encode_s", "waves", "depth_sum",
                  "depth_count")
 
+    def _stage_snapshot(self, group) -> dict:
+        """One telemetry view per STAGE: replica counters summed (time
+        totals and request counts are additive across the replicas that
+        split the stream), knobs read from replica 0 (set uniformly), and
+        the epoch as the MIN over replicas — the stage has fully adopted a
+        fence only when its slowest replica has.  live_replicas() prunes
+        dead retirees, whose frozen epochs would otherwise read as a
+        permanently lagging fence."""
+        snaps = [r.snapshot() for r in group.live_replicas()]
+        agg = {k: sum(s[k] for s in snaps) for k in self._COUNTERS}
+        agg["node"] = group.index
+        agg["replicas"] = len(snaps)
+        agg["epoch"] = min(s["epoch"] for s in snaps)
+        agg["max_batch"] = snaps[0]["max_batch"]
+        agg["coalesce_s"] = snaps[0]["coalesce_s"]
+        agg["batch_mean"] = (agg["n"] / agg["waves"] if agg["waves"]
+                             else 0.0)
+        agg["queue_depth_mean"] = (agg["depth_sum"] / agg["depth_count"]
+                                   if agg["depth_count"] else 0.0)
+        return agg
+
     @classmethod
     def _delta(cls, prev: dict | None, cur: dict) -> dict:
         """This interval's telemetry: cumulative counters diffed against
-        the previous snapshot (any counter that went DOWN means the engine
-        reset its report window — restart from the current values), with
-        the derived means (batch occupancy, queue depth) rebuilt from the
-        interval's own sums so every signal shares one time base."""
+        the previous snapshot, with the derived means (batch occupancy,
+        queue depth) rebuilt from the interval's own sums so every signal
+        shares one time base.
+
+        A counter that went DOWN means the baseline is gone — the engine
+        reset its report window, or a drained replica left the stage's
+        aggregate (a manual ``scale()`` is not guarded by the fence-lag
+        rebaseline if it cleared between control periods).  Either way
+        the current cumulative values are NOT one interval's telemetry,
+        so the interval is zeroed (skipped) rather than fed to the
+        calibrator as a giant fake window; the next tick diffs cleanly
+        against the new baseline."""
         if prev is None:
             out = dict(cur)
         else:
             out = dict(cur)
             deltas = {k: cur[k] - prev[k] for k in cls._COUNTERS}
             if any(v < 0 for v in deltas.values()):
-                deltas = {k: cur[k] for k in cls._COUNTERS}
+                deltas = {k: 0 for k in cls._COUNTERS}
             out.update(deltas)
         out["batch_mean"] = (out["n"] / out["waves"] if out["waves"]
                              else 0.0)
@@ -343,14 +444,14 @@ class Controller:
         d = self.dispatcher
         cfg = self.cfg
         now = time.perf_counter()
-        raw = [node.snapshot() for node in d.nodes]
+        raw = [self._stage_snapshot(g) for g in d.stages]
         prev = self._prev or [None] * len(raw)
         snaps = [self._delta(p, r) for p, r in zip(prev, raw)]
         self._prev = raw
         # an epoch fence can take several intervals to clear a backlogged
-        # chain: while any node still runs the old partition — and for one
-        # interval after the last one catches up (that interval's
-        # telemetry straddles both partitions) — rebaseline only
+        # chain: while any replica still runs the old partition /
+        # membership — and for one interval after the last one catches up
+        # (that interval's telemetry straddles both) — rebaseline only
         lagging = any(s["epoch"] < d.epoch for s in raw)
         if lagging or self._skip_update:
             self._skip_update = lagging
@@ -361,8 +462,8 @@ class Controller:
             return action
         ranges = d.partition.ranges()
         self.calibrator.update(snaps, ranges)
-        # every request traverses every node, so the interval's size is
-        # the MIN per-node count (summing would count each request k
+        # every request traverses every stage, so the interval's size is
+        # the MIN per-stage count (summing would count each request k
         # times); evidence accumulates across intervals until a decision
         window_n = min((s["n"] for s in snaps), default=0)
         self._accum_n += window_n
@@ -372,22 +473,34 @@ class Controller:
             for i, snap in enumerate(snaps):
                 if snap["n"] < cfg.knob_min_requests:
                     continue
-                mb, co = suggest_knobs(snap, d.nodes[i].max_batch_cap,
-                                       cfg.coalesce_bounds)
+                cap = d.stages[i].replicas[0].max_batch_cap
+                mb, co = suggest_knobs(snap, cap, cfg.coalesce_bounds)
                 if mb != snap["max_batch"] or co != snap["coalesce_s"]:
-                    d.set_node_knobs(i, max_batch=mb, coalesce_s=co)
-                    knob_moves.append({"node": i, "max_batch": mb,
+                    d.set_stage_knobs(i, max_batch=mb, coalesce_s=co)
+                    knob_moves.append({"stage": i, "max_batch": mb,
                                        "coalesce_s": co})
 
+        staged = d.stages[0].replicas[0].staged
+        reps = list(d.replicas)
+        bounds = [0, *d.partition.cuts, len(d.graph.nodes)]
+        gate_ok = (self.calibrator.ready
+                   and self._accum_n >= cfg.min_requests
+                   and now - self._last_migration_t >= cfg.cooldown_s)
         decision = None
-        if (cfg.repartition and self.calibrator.ready
-                and self._accum_n >= cfg.min_requests
-                and now - self._last_migration_t >= cfg.cooldown_s):
-            bounds = [0, *d.partition.cuts, len(d.graph.nodes)]
+        if cfg.repartition and gate_ok:
             decision = decide_repartition(
-                self.calibrator.costs(), bounds, len(d.nodes),
-                staged=d.nodes[0].staged, hysteresis=cfg.hysteresis,
-                window=cfg.window)
+                self.calibrator.costs(), bounds, len(d.stages),
+                staged=staged, hysteresis=cfg.hysteresis,
+                window=cfg.window, replicas=reps)
+        scale_rec = None
+        if decision is None and cfg.replica_scaling and gate_ok:
+            # cuts can't fix the bottleneck (the DP held): the replica
+            # dimension is the remaining lever
+            scale_rec = decide_scale(
+                self.calibrator.costs(), bounds, reps, staged=staged,
+                max_replicas=cfg.max_replicas,
+                up_ratio=cfg.scale_up_ratio,
+                down_ratio=cfg.scale_down_ratio)
         if decision is not None:
             record = d.reconfigure(decision["cuts"])
             self._last_migration_t = time.perf_counter()
@@ -395,14 +508,31 @@ class Controller:
             self._accum_n = 0
             self._skip_update = True
             if cfg.precompile_after_swap and record.get("acknowledged"):
-                # trace the swapped nodes' new batch shapes from the
+                # trace the swapped stages' new batch shapes from the
                 # controller thread: concurrent with serving (jit compiles
                 # are thread-safe), so the hot path never stalls on XLA
                 for i in record["nodes_touched"]:
-                    d.nodes[i].precompile()
+                    for node in d.stages[i].replicas:
+                        node.precompile()
             action = ControllerAction(now, "repartition",
                                       {**decision, **record,
                                        "knobs": knob_moves})
+        elif scale_rec is not None and cfg.execute_scaling:
+            record = d.scale(scale_rec["stage"], scale_rec["replicas"],
+                             precompile=cfg.precompile_after_swap)
+            self._last_migration_t = time.perf_counter()
+            self.migrations += 1
+            self._accum_n = 0
+            self._skip_update = True
+            action = ControllerAction(now, "scale",
+                                      {**scale_rec, **record,
+                                       "knobs": knob_moves})
+        elif scale_rec is not None:
+            # recommendation only: surfaced (and paced by the cooldown)
+            # for an operator or an external autoscaler to act on
+            self._last_migration_t = time.perf_counter()
+            action = ControllerAction(now, "scale_recommend",
+                                      {**scale_rec, "knobs": knob_moves})
         elif knob_moves:
             action = ControllerAction(now, "knobs", {"knobs": knob_moves})
         else:

@@ -1,15 +1,33 @@
-"""The DEFER dispatcher (paper Algorithm 1), in-process, async.
+"""The DEFER dispatcher (paper Algorithm 1), topology-first, in-process.
 
-Partitions the model, ships architecture + weights to each compute node
-(configuration step), then serves a *multi-client* inference stream: a
-bounded admission queue applies backpressure at the front door, a pump
-thread feeds the head of the chain, compute nodes continuously batch (and
-relay whole batches as single :class:`BatchEnvelope` payloads), and a
-collector thread decodes each tail envelope ONCE, slices per-request rows
-back out, and resolves the per-request futures — FIFO per client (the
-batching chain may legally reorder across clients).  A batch that failed
-inside a node arrives as an ``error`` envelope; the collector fails exactly
-those futures with :class:`NodeError` while the chain keeps serving.
+The dispatcher builds whatever a :class:`~repro.runtime.topology.TopologySpec`
+declares — stages x replicas x transports — instead of the original
+hard-wired linear chain.  It partitions the model, ships architecture +
+weights to every replica of every stage (configuration step), then serves a
+*multi-client* inference stream: a bounded admission queue applies
+backpressure at the front door, a pump thread feeds the first stage's
+router, each stage's router spreads whole batches across its replicas
+(round-robin or least-queue-depth), and a collector thread decodes each
+tail envelope ONCE, slices per-request rows back out, and resolves the
+per-request futures through a **sequence-numbered merge**: results are
+released strictly in each client's submission order, so FIFO-per-client
+holds even when replicated stages complete batches out of order (the
+batching chain may still legally reorder across clients).  A batch that
+failed inside a node arrives as an ``error`` envelope; the collector fails
+exactly those futures with :class:`NodeError` while the chain keeps
+serving.
+
+Live mutation rides one mechanism, the epoch fence
+(:class:`~repro.runtime.wire.ReconfigMarker` + per-stage router barriers):
+
+* :meth:`reconfigure` moves the partition boundaries (weight-diff
+  shipping, all replicas of a stage swap at the fence), and
+* :meth:`scale` grows or drains a stage's replica count — spawn = ship
+  the stage's weights to fresh replicas and fence them into the routing
+  set; drain = fence them out, let them flush, retire.
+
+Both guarantee zero dropped, duplicated, or per-client-reordered
+responses; both are what the serving controller actuates.
 """
 from __future__ import annotations
 
@@ -28,6 +46,9 @@ import numpy as np
 from repro.core.graph import LayerGraph
 from repro.core.partitioner import LinkModel, Partition, partition
 from repro.runtime.node import _STOP, ComputeNode
+from repro.runtime.router import FenceTally, StageGroup
+from repro.runtime.topology import TopologySpec
+from repro.runtime.transport import Channel, get_transport
 from repro.runtime.wire import (BatchEnvelope, NodePlan, ReconfigMarker,
                                 RowExtent, WireCodec, WireRecord, slice_parts)
 
@@ -122,37 +143,56 @@ class _WeightedAdmissionQueue:
 
 
 class Dispatcher:
-    """Owns the chain: planning, configuration, and the admission stream."""
+    """Owns the topology: planning, configuration, routing, and the
+    admission stream."""
 
-    def __init__(self, graph: LayerGraph, num_nodes: int,
+    def __init__(self, graph: LayerGraph, topology: TopologySpec,
                  codecs: DispatcherCodecs | None = None,
-                 strategy: str = "equal_layers",
                  link: LinkModel | None = None,
                  max_batch: int = 8,
                  admission_depth: int = 64,
                  queue_depth: int = 8,
                  staged: bool = True,
-                 cuts: Sequence[int] | None = None,
                  client_quota: int | None = None,
                  shape_buckets: str = "exact",
                  max_batch_cap: int | None = None):
+        if isinstance(topology, int):
+            topology = TopologySpec.chain(graph, topology)
+        topology.validate(graph)
         self.graph = graph
+        self.topology = topology
         self.codecs = codecs or DispatcherCodecs()
         self.link = link
+        self._defaults = dict(max_batch=max_batch, queue_depth=queue_depth,
+                              staged=staged, shape_buckets=shape_buckets,
+                              max_batch_cap=max_batch_cap)
         self.partition: Partition = partition(
-            graph, num_nodes, strategy=strategy, link=link, cuts=cuts)
-        self.nodes: list[ComputeNode] = [
-            ComputeNode(i, self.codecs.data, queue_depth=queue_depth,
-                        max_batch=max_batch, staged=staged,
-                        shape_buckets=shape_buckets,
-                        max_batch_cap=max_batch_cap)
-            for i in range(num_nodes)]
-        self.config_records: list[WireRecord] = []
-        self.result_queue: queue.Queue = queue.Queue()
-        for i in range(num_nodes - 1):
-            self.nodes[i].next_inbox = self.nodes[i + 1].inbox
-        self.nodes[-1].next_inbox = self.result_queue
+            graph, topology.num_stages,
+            link=link, cuts=list(topology.cuts) or None,
+            replicas=topology.replicas)
 
+        # wiring: per stage, an input channel (fed by the pump or by the
+        # previous stage's replicas) and a router spreading it across the
+        # stage's replicas; the last stage feeds the collector's channel
+        self._stage_inputs: list[Channel] = [
+            get_transport(s.transport).channel(queue_depth)
+            for s in topology.stages]
+        self.result_channel: Channel = get_transport(
+            topology.stages[-1].transport).channel(0)
+        self.stages: list[StageGroup] = []
+        for i, spec in enumerate(topology.stages):
+            replicas = [self._make_node(i, r) for r in range(spec.replicas)]
+            group = StageGroup(i, spec, replicas, self._stage_inputs[i],
+                               upstream=self.stages[i - 1] if i else None,
+                               fail_batch=self._finish_batch)
+            self.stages.append(group)
+        for i, group in enumerate(self.stages):
+            nxt = (self._stage_inputs[i + 1] if i + 1 < len(self.stages)
+                   else self.result_channel)
+            for node in group.replicas:
+                node.next_inbox = nxt
+
+        self.config_records: list[WireRecord] = []
         self.admission = _WeightedAdmissionQueue(admission_depth)
         # per-client admission quota: max in-flight (admitted, unresolved)
         # requests per client_id; None = unlimited
@@ -165,6 +205,14 @@ class Dispatcher:
         self._futures: dict[int, Future] = {}
         self._next_id = 0
         self._client_seq: dict[Any, int] = defaultdict(int)
+        # the sequenced merge: per client, results arriving out of
+        # submission order (replicated stages complete out of order) are
+        # held and released strictly by seq, so per-client responses are
+        # never reordered; seqs whose submit failed before admission are
+        # cancelled so the merge never stalls on a hole
+        self._client_next: dict[Any, int] = defaultdict(int)
+        self._client_hold: dict[Any, dict[int, tuple]] = defaultdict(dict)
+        self._client_cancel: dict[Any, set[int]] = defaultdict(set)
         self._inflight = 0
         self._admitting = 0        # registered but not yet on the admission q
         self._lock = threading.Lock()
@@ -174,49 +222,89 @@ class Dispatcher:
         self._configured = False
         self._started = False
         self._closed = False
-        # live-repartition state: reconfigure() is serialized, the epoch
-        # counts committed migrations, and the event acknowledges the
-        # marker's arrival at the tail (chain-wide swap complete)
+        # live-mutation state: reconfigure()/scale() are serialized, the
+        # epoch counts committed fences, and the event acknowledges the
+        # fence barrier completing at the tail (chain-wide swap done)
         self.epoch = 0
         self.reconfig_records: list[dict] = []
         self._params: dict[str, Any] | None = None
         self._reconfig_lock = threading.Lock()
         self._reconfig_event: threading.Event | None = None
         self._reconfig_expect = 0      # epoch the pending event waits for
+        # tail barrier state (collector thread only): the collector is the
+        # degenerate downstream consumer of the last stage, sharing the
+        # routers' FenceTally accounting
+        self._tail = FenceTally(len(self.stages[-1].replicas))
+
+    def _make_node(self, stage: int, replica: int) -> ComputeNode:
+        """One replica of one stage, with the stage spec's overrides
+        applied over the engine-wide defaults."""
+        spec = self.topology.stages[stage]
+        d = self._defaults
+        node = ComputeNode(
+            stage, self.codecs.data, replica=replica,
+            queue_depth=d["queue_depth"],
+            max_batch=spec.max_batch or d["max_batch"],
+            staged=d["staged"],
+            shape_buckets=spec.shape_buckets or d["shape_buckets"],
+            max_batch_cap=spec.max_batch_cap or d["max_batch_cap"],
+            inbox=get_transport(spec.transport).channel(d["queue_depth"]))
+        if spec.coalesce_s is not None:
+            node.coalesce_s = spec.coalesce_s
+        return node
+
+    @property
+    def nodes(self) -> list[ComputeNode]:
+        """Every live replica, stage-major (stats/report convenience);
+        prunes dead retirees as a side effect (see live_replicas)."""
+        return [r for g in self.stages for r in g.live_replicas()]
+
+    @property
+    def replicas(self) -> tuple[int, ...]:
+        return tuple(len(g.live_replicas()) for g in self.stages)
 
     # -- configuration step --------------------------------------------------
-    def configure(self, params: dict[str, Any]) -> None:
-        """Ship each partition's architecture + weights over the wire."""
-        for node, (lo, hi) in zip(self.nodes, self.partition.ranges()):
-            names = [n.name for n in self.graph.slice_nodes(lo, hi)]
-            spec = {"layers": names,
-                    "next": node.index + 1 if node.index + 1 < len(self.nodes)
-                    else None}
-            arch_blob = json.dumps(spec).encode()
-            t0 = time.perf_counter()
-            if self.codecs.architecture.compression == "lz4":
-                from repro.core.codecs import Lz4Codec
-                arch_wire = Lz4Codec().compress(arch_blob)
-            else:
-                arch_wire = arch_blob
-            t1 = time.perf_counter()
+    def _stage_blobs(self, stage: int, lo: int, hi: int,
+                     record: bool = True) -> tuple[bytes, bytes]:
+        """Wire-encode one stage's architecture spec + full weights."""
+        names = [n.name for n in self.graph.slice_nodes(lo, hi)]
+        spec = {"layers": names,
+                "next": stage + 1 if stage + 1 < len(self.stages) else None}
+        arch_blob = json.dumps(spec).encode()
+        t0 = time.perf_counter()
+        if self.codecs.architecture.compression == "lz4":
+            from repro.core.codecs import Lz4Codec
+            arch_wire = Lz4Codec().compress(arch_blob)
+        else:
+            arch_wire = arch_blob
+        t1 = time.perf_counter()
+        if record:
             self.config_records.append(WireRecord(
                 "architecture", len(arch_blob), len(arch_wire), t1 - t0))
-
-            stage_params = {name: params[name] for name in names}
-            weights_blob, rec = self.codecs.weights.encode_tree(
-                stage_params, "weights")
+        stage_params = {name: self._params[name] for name in names}
+        weights_blob, rec = self.codecs.weights.encode_tree(
+            stage_params, "weights")
+        if record:
             self.config_records.append(rec)
-            node.configure(self.graph, lo, hi, arch_blob, weights_blob,
-                           self.codecs.weights)
+        return arch_blob, weights_blob
+
+    def configure(self, params: dict[str, Any]) -> None:
+        """Ship each stage's architecture + weights over the wire — once
+        per replica (each replica holds the full stage)."""
         # the dispatcher owns the full model (paper setting): retained so a
-        # live repartition can ship the weight DIFF of shifted layers only
+        # live repartition can ship the weight DIFF of shifted layers only,
+        # and so scale() can configure freshly spawned replicas
         self._params = params
+        for group, (lo, hi) in zip(self.stages, self.partition.ranges()):
+            arch_blob, weights_blob = self._stage_blobs(group.index, lo, hi)
+            for node in group.replicas:
+                node.configure(self.graph, lo, hi, arch_blob, weights_blob,
+                               self.codecs.weights)
         self._configured = True
 
     def precompile(self) -> None:
-        """Compile every batch-size specialization on every node up front
-        (see :meth:`ComputeNode.precompile`)."""
+        """Compile every batch-size specialization on every replica up
+        front (see :meth:`ComputeNode.precompile`)."""
         assert self._configured, "configure() before precompile()"
         for node in self.nodes:
             node.precompile()
@@ -229,6 +317,8 @@ class Dispatcher:
         self._started = True
         for node in self.nodes:
             node.start()
+        for group in self.stages:
+            group.start()
         self._pump_thread = threading.Thread(target=self._pump, daemon=True)
         self._pump_thread.start()
         self._collect_thread = threading.Thread(target=self._collect,
@@ -236,33 +326,49 @@ class Dispatcher:
         self._collect_thread.start()
 
     def _pump(self) -> None:
-        """Admission queue -> head of the chain (the dispatcher's outbound
-        socket).  Keeping this off the caller thread means submit() returns
-        as soon as the request is *admitted*, not relayed."""
-        head = self.nodes[0].inbox
+        """Admission queue -> first stage's router (the dispatcher's
+        outbound socket).  Keeping this off the caller thread means
+        submit() returns as soon as the request is *admitted*, not
+        relayed."""
+        head = self._stage_inputs[0]
         while True:
             env = self.admission.get()
             if env is _STOP:
-                head.put(_STOP)
+                head.send(_STOP)
                 return
-            head.put(env)
+            head.send(env)
 
     def _collect(self) -> None:
-        """Tail of the chain -> per-request futures (FIFO per client).
+        """Tail of the topology -> per-request futures, released in
+        per-client seq order by the sequenced merge.
 
         One decode per tail envelope; per-request rows are sliced back out
-        of the stacked payload by the envelope's row-extent framing."""
+        of the stacked payload by the envelope's row-extent framing.  The
+        collector is also the tail end of every fence: it completes the
+        marker barrier over the last stage's replicas and acknowledges the
+        epoch chain-wide."""
         while True:
-            item = self.result_queue.get()
+            item = self.result_channel.recv()
             if item is _STOP:
-                return
+                if self._tail.on_stop():
+                    return
+                continue
             if isinstance(item, ReconfigMarker):
-                # the epoch fence cleared the whole chain: every node
-                # swapped.  Ack by epoch — a stale fence from an earlier
-                # timed-out reconfigure must not acknowledge a later one
+                e = item.epoch
+                if not self._tail.on_marker(e, self.stages[-1]):
+                    continue
+                # the epoch fence cleared the whole topology: every replica
+                # of every stage swapped.  Ack by epoch — a stale fence
+                # from an earlier timed-out mutation must not acknowledge
+                # a later one
                 ev = self._reconfig_event
-                if ev is not None and item.epoch >= self._reconfig_expect:
+                if ev is not None and e >= self._reconfig_expect:
                     ev.set()
+                if self._tail.stopped:
+                    # shutdown raced an in-flight drain fence of the last
+                    # stage (see FenceTally): the retired replica never
+                    # stops, so the last live stop may precede this fence
+                    return
                 continue
             env: BatchEnvelope = item
             if env.error is not None:
@@ -279,32 +385,71 @@ class Dispatcher:
                        for p in parts]
             self._finish_batch(env.extents, results=results)
 
+    def _release_locked(self, client: Any, now: float) -> list[tuple]:
+        """Pop every in-order (by seq) completed result for ``client``.
+        Caller holds ``_lock``; resolves futures AFTER dropping it."""
+        out: list[tuple] = []
+        nxt = self._client_next[client]
+        hold = self._client_hold[client]
+        cancel = self._client_cancel[client]
+        while True:
+            if nxt in cancel:               # submit failed pre-admission:
+                cancel.discard(nxt)         # the hole is not a lost result
+                nxt += 1
+                continue
+            entry = hold.pop(nxt, None)
+            if entry is None:
+                break
+            fut, res, err, ext = entry
+            if err is None:
+                # failures resolve fast by construction — mixing their
+                # time-to-failure into the percentiles would *improve*
+                # reported latency as the error rate rises
+                self.latencies.append(now - ext.t_submit)
+            self._inflight -= 1
+            self._client_inflight[client] -= 1
+            out.append((fut, res, err))
+            nxt += 1
+        self._client_next[client] = nxt
+        if (self._client_inflight.get(client, 0) == 0 and not hold
+                and not cancel):
+            # idle client fully drained: drop its merge/quota/seq state so
+            # ephemeral client ids (per-request UUIDs) can't grow these
+            # maps without bound.  Seq and next are dropped TOGETHER — a
+            # returning client restarts a consistent fresh sequence.
+            for m in (self._client_hold, self._client_cancel,
+                      self._client_next, self._client_seq,
+                      self._client_inflight):
+                m.pop(client, None)
+        if out:
+            self._idle.notify_all()
+        return out
+
+    @staticmethod
+    def _resolve(done: list[tuple]) -> None:
+        """Resolve released futures — called OUTSIDE the lock."""
+        for fut, res, err in done:
+            if err is not None:
+                fut.set_exception(NodeError(
+                    f"request failed inside the chain:\n{err}"))
+            else:
+                fut.set_result(res)
+
     def _finish_batch(self, extents: list[RowExtent],
                       results: list | None = None,
                       error: str | None = None) -> None:
         now = time.perf_counter()
-        done: list[tuple[Future, Any]] = []
+        done: list[tuple] = []
         with self._lock:
             for idx, ext in enumerate(extents):
                 fut = self._futures.pop(ext.request_id, None)
                 if fut is None:
                     continue
-                if error is None:
-                    # failures resolve fast by construction — mixing their
-                    # time-to-failure into the percentiles would *improve*
-                    # reported latency as the error rate rises
-                    self.latencies.append(now - ext.t_submit)
-                self._inflight -= 1
-                self._client_inflight[ext.client_id] -= 1
-                done.append((fut, results[idx] if results is not None
-                             else None))
-            self._idle.notify_all()
-        for fut, res in done:
-            if error is not None:
-                fut.set_exception(NodeError(
-                    f"request failed inside the chain:\n{error}"))
-            else:
-                fut.set_result(res)
+                self._client_hold[ext.client_id][ext.seq] = (
+                    fut, results[idx] if results is not None else None,
+                    error, ext)
+                done.extend(self._release_locked(ext.client_id, now))
+        self._resolve(done)
 
     # -- admission --------------------------------------------------------------
     def submit(self, x: np.ndarray, client_id: Any = 0,
@@ -322,7 +467,9 @@ class Dispatcher:
         ``priority`` selects the admission band: the pump dequeues bands
         weighted-fair (weight ``priority + 1``), so higher-priority
         backlogged clients drain proportionally faster without starving
-        priority 0.
+        priority 0.  A client's responses are still released in its own
+        submission order (the sequenced merge), whatever the priorities
+        or replica completion order did to the in-chain ordering.
         """
         if not self._started:
             self.start()
@@ -359,25 +506,31 @@ class Dispatcher:
             self.admission.put(env, block=block, timeout=timeout,
                                priority=priority)
         except queue.Full:
-            self._unregister(rid, client_id)
+            self._unregister(rid, client_id, seq)
             raise AdmissionFull(
                 f"admission queue full ({self.admission.maxsize} deep)")
         except BaseException:
-            self._unregister(rid, client_id)
+            self._unregister(rid, client_id, seq)
             raise
         with self._lock:
             self._admitting -= 1
             self._idle.notify_all()
         return fut
 
-    def _unregister(self, rid: int, client_id: Any) -> None:
-        """Roll back a registration whose envelope never reached admission."""
+    def _unregister(self, rid: int, client_id: Any, seq: int) -> None:
+        """Roll back a registration whose envelope never reached admission.
+        The seq is cancelled in the merge so later results can't stall
+        behind the hole — and any later-seq results already held behind
+        it are released now (nothing else would ever re-drain them)."""
         with self._lock:
             self._futures.pop(rid, None)
+            self._client_cancel[client_id].add(seq)
             self._inflight -= 1
             self._client_inflight[client_id] -= 1
             self._admitting -= 1
+            done = self._release_locked(client_id, time.perf_counter())
             self._idle.notify_all()
+        self._resolve(done)
 
     def infer_stream(self, inputs: Iterable[np.ndarray],
                      client_id: Any = 0) -> list[np.ndarray]:
@@ -389,23 +542,25 @@ class Dispatcher:
     # -- live reconfiguration (the controller's commit path) -------------------
     def reconfigure(self, cuts: Sequence[int],
                     timeout: float | None = 60.0) -> dict:
-        """Hot-migrate partition boundaries on the RUNNING chain.
+        """Hot-migrate partition boundaries on the RUNNING topology.
 
-        Two-phase: (1) PREPARE — for each node whose range changes, build a
-        :class:`NodePlan` carrying its new architecture spec and the wire-
-        encoded weights of only the layers it GAINS (the weight diff; kept
-        layers are reused in place); (2) COMMIT — inject one
-        :class:`ReconfigMarker` at the head of the chain.  The marker rides
-        the same FIFO queues as data envelopes, so each node swaps exactly
-        when the fence passes its compute stage: every in-flight request is
-        processed by a consistent partition end-to-end and none is dropped
-        or recomputed.  Blocks until the tail collector acknowledges the
-        fence (or ``timeout``).
+        Two-phase: (1) PREPARE — for each stage whose range changes, build
+        a :class:`NodePlan` carrying its new architecture spec and the
+        wire-encoded weights of only the layers it GAINS (the weight diff;
+        kept layers are reused in place; every replica of the stage applies
+        the same plan); (2) COMMIT — inject one :class:`ReconfigMarker` at
+        the head of the topology.  The marker rides the same FIFO channels
+        as data envelopes; each stage's router barriers it over the
+        upstream replicas and broadcasts it to its own, so every replica
+        swaps exactly when the fence passes its compute stage: every
+        in-flight request is processed by a consistent partition end-to-end
+        and none is dropped or recomputed.  Blocks until the tail collector
+        completes the final barrier (or ``timeout``).
 
-        The fence rides in-process FIFO queues, so it cannot be lost: an
+        The fence rides FIFO channels, so it cannot be lost: an
         un-acknowledged return (``acknowledged: False``) means the marker
         is still behind a backlog, not that the migration failed — the
-        nodes WILL adopt the committed cuts when it clears, which is why
+        replicas WILL adopt the committed cuts when it clears, which is why
         ``partition``/``epoch`` are updated to the committed target either
         way.  Callers treat un-acked as migration-in-progress (the
         controller skips its post-swap precompile and rebaselines its
@@ -421,10 +576,10 @@ class Dispatcher:
                           len(self.graph.nodes)]
             new_ranges = list(zip(new_bounds, new_bounds[1:]))
             old_ranges = [tuple(r) for r in self.partition.ranges()]
-            if len(new_ranges) != len(self.nodes):
+            if len(new_ranges) != len(self.stages):
                 raise ValueError(
                     f"cuts {tuple(cuts)} give {len(new_ranges)} stages for "
-                    f"{len(self.nodes)} nodes")
+                    f"{len(self.stages)} stages")
             if any(hi <= lo for lo, hi in new_ranges):
                 raise ValueError(f"cuts {tuple(cuts)} leave an empty stage")
             if [tuple(r) for r in new_ranges] == old_ranges:
@@ -437,13 +592,13 @@ class Dispatcher:
             for i, ((lo, hi), (lo2, hi2)) in enumerate(
                     zip(old_ranges, new_ranges)):
                 if (lo, hi) == (lo2, hi2):
-                    continue               # untouched node: no plan, no bytes
+                    continue               # untouched stage: no plan, no bytes
                 names = [n.name for n in self.graph.slice_nodes(lo2, hi2)]
                 kept = {n.name for n in self.graph.slice_nodes(lo, hi)}
                 gained = [nm for nm in names if nm not in kept]
                 moved_layers += len(gained)
                 spec = {"layers": names,
-                        "next": i + 1 if i + 1 < len(self.nodes) else None}
+                        "next": i + 1 if i + 1 < len(self.stages) else None}
                 arch_blob = json.dumps(spec).encode()
                 weights_blob = b""
                 if gained:
@@ -454,19 +609,23 @@ class Dispatcher:
                                     self.codecs.weights,
                                     wire_bytes=len(arch_blob)
                                     + len(weights_blob))
-                shipped += plans[i].wire_bytes
+                # the diff travels once per REPLICA of the stage
+                shipped += plans[i].wire_bytes * len(
+                    self.stages[i].live_replicas())
 
             ev = threading.Event()
             self._reconfig_expect = epoch
             self._reconfig_event = ev
             t0 = time.perf_counter()
-            # the fence enters the head node's inbox like any envelope and
-            # stays ordered behind everything already pumped
-            self.nodes[0].inbox.put(ReconfigMarker(epoch, plans))
+            # the fence enters the first stage's router like any envelope
+            # and stays ordered behind everything already pumped
+            self._stage_inputs[0].send(ReconfigMarker(epoch, plans))
             acked = ev.wait(timeout)
             self._reconfig_event = None
-            self.partition = partition(self.graph, len(self.nodes),
-                                       link=self.link, cuts=new_bounds[1:-1])
+            self.topology = self.topology.with_layers(new_bounds)
+            self.partition = partition(self.graph, len(self.stages),
+                                       link=self.link, cuts=new_bounds[1:-1],
+                                       replicas=self.replicas)
             self.epoch = epoch
             record = {
                 "epoch": epoch, "changed": True, "acknowledged": acked,
@@ -479,16 +638,130 @@ class Dispatcher:
             self.reconfig_records.append(record)
             return record
 
-    def set_node_knobs(self, index: int, max_batch: int | None = None,
-                       coalesce_s: float | None = None) -> None:
-        """Retune one node's serving knobs live (controller's actuator).
-        ``max_batch`` is clamped to [1, max_batch_cap] so precompiled batch
-        specializations stay authoritative."""
-        node = self.nodes[index]
-        if max_batch is not None:
-            node.max_batch = min(max(1, int(max_batch)), node.max_batch_cap)
-        if coalesce_s is not None:
-            node.coalesce_s = max(0.0, float(coalesce_s))
+    # -- elastic membership (spawn / drain replicas) ---------------------------
+    def scale(self, stage: int, replicas: int,
+              timeout: float | None = 60.0,
+              precompile: bool = False) -> dict:
+        """Grow or shrink one stage's replica count on the RUNNING chain.
+
+        Spawn (``replicas`` > current): fresh :class:`ComputeNode`
+        replicas are built, configured over the wire with the stage's full
+        weights, and started; the epoch fence then adds them to the
+        stage's routing set — they only ever see post-fence work, so no
+        request straddles the membership change.
+
+        Drain (``replicas`` < current): the fence removes the
+        highest-numbered replicas from the routing set; each draining
+        replica still receives the fence (flushing everything already
+        routed to it, which the downstream barrier then accounts for) and
+        a trailing retire token, after which its threads exit without
+        signaling downstream.  Zero requests are dropped, duplicated, or
+        reordered per client.
+
+        Blocks until the collector acknowledges the fence (or
+        ``timeout``); un-acked means fence-in-flight, exactly as for
+        :meth:`reconfigure`.  ``precompile=True`` traces spawned replicas'
+        batch specializations before they join (no jit inside a serving
+        window, at the cost of a slower scale-up).
+        """
+        assert self._configured and self._params is not None, \
+            "configure() before scale()"
+        assert self._started, "scale() fences a running chain"
+        if not 0 <= stage < len(self.stages):
+            raise ValueError(f"no stage {stage} in a "
+                             f"{len(self.stages)}-stage topology")
+        if replicas < 1:
+            raise ValueError("a stage needs at least one replica")
+        with self._reconfig_lock:
+            group = self.stages[stage]
+            # a replica drained by an earlier un-acked scale stays listed
+            # while it flushes (telemetry/knobs/shutdown must see it);
+            # live_replicas() prunes it once its threads exit
+            live = [r for r in group.live_replicas() if not r.retiring]
+            cur = len(live)
+            if replicas == cur:
+                return {"epoch": self.epoch, "changed": False,
+                        "stage": stage, "replicas": cur}
+            epoch = self.epoch + 1
+            adds: list[ComputeNode] = []
+            drops: list[ComputeNode] = []
+            shipped = 0
+            t0 = time.perf_counter()
+            if replicas > cur:
+                lo, hi = self.partition.ranges()[stage]
+                arch_blob, weights_blob = self._stage_blobs(stage, lo, hi)
+                next_r = max((n.replica for n in group.replicas),
+                             default=-1) + 1
+                nxt = (self._stage_inputs[stage + 1]
+                       if stage + 1 < len(self.stages)
+                       else self.result_channel)
+                ref = live[0]
+                for k in range(replicas - cur):
+                    node = self._make_node(stage, next_r + k)
+                    # inherit the stage's LIVE knobs, not the spec
+                    # defaults: the controller tunes knobs uniformly per
+                    # stage and compares against replica 0's values, so a
+                    # default-knobbed newcomer would never be corrected
+                    node.max_batch = ref.max_batch
+                    node.coalesce_s = ref.coalesce_s
+                    node.configure(self.graph, lo, hi, arch_blob,
+                                   weights_blob, self.codecs.weights)
+                    node.next_inbox = nxt
+                    if precompile:
+                        node.precompile()
+                    node.start()
+                    adds.append(node)
+                    shipped += len(arch_blob) + len(weights_blob)
+            else:
+                drops = live[replicas:]
+            group.stage_membership(epoch, adds, drops)
+            group.replicas.extend(adds)     # stats/report see them at once
+            for node in drops:
+                node.retiring = True
+
+            ev = threading.Event()
+            self._reconfig_expect = epoch
+            self._reconfig_event = ev
+            self._stage_inputs[0].send(ReconfigMarker(epoch, {}))
+            acked = ev.wait(timeout)
+            self._reconfig_event = None
+            self.epoch = epoch
+            if acked:
+                # fence cleared chain-wide: the drops flushed everything
+                # and their threads are exiting — join, then prune.
+                # Un-acked drops stay visible until they exit (pruned by
+                # any live_replicas() reader; shutdown joins them too).
+                for node in drops:
+                    node.join()
+                group.live_replicas()
+            self.topology = self.topology.with_replicas(stage, replicas)
+            self.partition = partition(
+                self.graph, len(self.stages), link=self.link,
+                cuts=list(self.partition.cuts) or None,
+                replicas=self.replicas)
+            record = {
+                "epoch": epoch, "changed": True, "acknowledged": acked,
+                "kind": "scale", "stage": stage,
+                "replicas_before": cur, "replicas_after": replicas,
+                "spawned": len(adds), "retired": len(drops),
+                "shipped_bytes": shipped,
+                "scale_s": time.perf_counter() - t0,
+            }
+            self.reconfig_records.append(record)
+            return record
+
+    def set_stage_knobs(self, stage: int, max_batch: int | None = None,
+                        coalesce_s: float | None = None) -> None:
+        """Retune one stage's serving knobs live (controller's actuator),
+        uniformly across its replicas.  ``max_batch`` is clamped to
+        [1, max_batch_cap] so precompiled batch specializations stay
+        authoritative."""
+        for node in self.stages[stage].replicas:
+            if max_batch is not None:
+                node.max_batch = min(max(1, int(max_batch)),
+                                     node.max_batch_cap)
+            if coalesce_s is not None:
+                node.coalesce_s = max(0.0, float(coalesce_s))
 
     # -- teardown ---------------------------------------------------------------
     def drain(self, timeout: float | None = None) -> bool:
@@ -509,8 +782,10 @@ class Dispatcher:
         """Stop accepting requests; by default let in-flight ones finish.
 
         The _STOP token trails every admitted envelope through the FIFO
-        chain, so even ``drain=False`` completes (not cancels) in-flight
-        requests — drain merely waits for the results before teardown.
+        channels — each router broadcasts it to its replicas after
+        receiving one copy per upstream replica — so even ``drain=False``
+        completes (not cancels) in-flight requests; drain merely waits for
+        the results before teardown.
         """
         with self._lock:
             if self._closed:
@@ -528,7 +803,9 @@ class Dispatcher:
         self.admission.put(_STOP)
         if self._pump_thread:
             self._pump_thread.join()
-        for node in self.nodes:
-            node.join()
+        for group in self.stages:
+            group.join()
+            for node in list(group.replicas):   # incl. flushing retirees
+                node.join()
         if self._collect_thread:
             self._collect_thread.join()

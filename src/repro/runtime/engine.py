@@ -1,22 +1,30 @@
 """Top-level DEFER inference engine + measured metrics report.
 
-``InferenceEngine`` is the public API the examples use: build from a layer
-graph, then either
+``InferenceEngine`` is the public, topology-first API the examples use:
+declare the serving shape as a :class:`~repro.runtime.topology.TopologySpec`
+(stages x replicas x transports — or pass an int for the classic
+one-replica chain), build the engine from a layer graph, then either
 
 * ``submit(x, client_id)`` / ``stream(xs, client_id)`` — the async serving
-  path: many clients admit requests concurrently, compute nodes batch them
-  continuously, results come back as futures (FIFO per client), or
+  path: many clients admit requests concurrently, compute replicas batch
+  them continuously, results come back as futures (FIFO per client — the
+  collector's sequenced merge holds replica-reordered completions), or
 * ``run(xs)`` — the original blocking single-stream call, now a shim over
   submit().
+
+Topology is LIVE: ``scale(stage, n)`` grows or drains a stage's replica
+count behind the epoch fence with zero dropped or per-client-reordered
+responses — the node-count elasticity the chain-shaped API could not
+express.
 
 The report carries the paper's four metrics — throughput, per-node energy,
 overhead, payload — from measured timings plus the link model for wire
 time/energy (the part CORE emulates in the original), and the serving
-ones: per-node *per-stage* utilization (decode / compute / encode busy
+ones: per-replica *per-stage* utilization (decode / compute / encode busy
 fractions of the measurement-window wall clock, so the staged codec/compute
 overlap is visible), queue depth, batch occupancy, and p50/p99 request
-latency, so the paper's ``1/max_i service_i`` law is observable under real
-multi-client load.
+latency, so the paper's ``1/max_i service_i`` law — amortized by replica
+counts — is observable under real multi-client load.
 
 Utilizations come in two flavors per stage: the clamped ``util_*`` (a
 fraction of the window, capped at 1.0 for dashboard sanity) and the raw
@@ -28,15 +36,17 @@ that oversubscription honestly to avoid tuning against a saturated lie.
 With ``controller=ControllerConfig(...)`` the engine runs the serving-time
 feedback loop (:mod:`repro.runtime.controller`): online cost calibration
 from this report's raw telemetry, periodic re-planning of the partition on
-measured costs, hot repartitioning behind an epoch fence, and adaptive
-``max_batch`` / ``coalesce_s`` per node.
+measured costs, hot repartitioning behind an epoch fence, adaptive
+``max_batch`` / ``coalesce_s`` per stage — and, when enabled, the replica
+dimension: scale recommendations (or executions) for bottleneck stages the
+calibrated DP cannot fix by moving cuts.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from concurrent.futures import Future
-from typing import Any, Iterable, Iterator, Sequence
+from typing import Any, Iterable, Iterator
 
 import numpy as np
 
@@ -46,13 +56,14 @@ from repro.core.metrics import (EDGE, HardwareProfile, LatencySummary,
 from repro.core.partitioner import LinkModel
 from repro.runtime.controller import Controller, ControllerConfig
 from repro.runtime.dispatcher import Dispatcher, DispatcherCodecs
+from repro.runtime.topology import TopologySpec
 from repro.runtime.wire import CHUNK_BYTES
 
 
 @dataclasses.dataclass
 class EngineReport:
     model: str
-    num_nodes: int
+    num_nodes: int                     # total live replicas across stages
     codec: str
     samples: int
     wall_s: float
@@ -63,42 +74,54 @@ class EngineReport:
     payload_mb: float                  # inter-node payload per cycle
     p50_latency_s: float               # admission -> result, this window
     p99_latency_s: float
-    per_node: list[dict]
+    per_node: list[dict]               # one entry per replica, stage-major
     cuts: tuple = ()                   # live partition cut indices
-    epoch: int = 0                     # committed live repartitions so far
+    replicas: tuple = ()               # live per-stage replica counts
+    epoch: int = 0                     # committed live fences so far
 
 
 class InferenceEngine:
-    def __init__(self, graph: LayerGraph, num_nodes: int,
+    def __init__(self, graph: LayerGraph,
+                 topology: TopologySpec | int,
                  codecs: DispatcherCodecs | None = None,
-                 strategy: str = "equal_layers",
                  hw: HardwareProfile = EDGE,
                  link: LinkModel | None = None,
                  max_batch: int = 8,
                  admission_depth: int = 64,
                  queue_depth: int = 8,
                  staged: bool = True,
-                 cuts: Sequence[int] | None = None,
                  client_quota: int | None = None,
                  shape_buckets: str = "exact",
                  max_batch_cap: int | None = None,
                  controller: ControllerConfig | None = None):
+        """``topology`` is the serving shape: a
+        :class:`~repro.runtime.topology.TopologySpec`, or an int ``n`` as
+        shorthand for ``TopologySpec.chain(graph, n)`` (the paper's
+        one-replica equal-layers chain).  Strategy, explicit cuts, and
+        per-stage overrides all live on the spec, not here."""
+        if isinstance(topology, int):
+            topology = TopologySpec.chain(graph, topology)
         self.graph = graph
         self.hw = hw
         self.link = link or LinkModel(bandwidth_bytes_per_s=hw.link_bw,
                                       energy_per_bit_j=hw.energy_per_bit_j)
-        self.dispatcher = Dispatcher(graph, num_nodes, codecs, strategy,
-                                     self.link, max_batch=max_batch,
+        self.dispatcher = Dispatcher(graph, topology, codecs,
+                                     link=self.link, max_batch=max_batch,
                                      admission_depth=admission_depth,
                                      queue_depth=queue_depth, staged=staged,
-                                     cuts=cuts, client_quota=client_quota,
+                                     client_quota=client_quota,
                                      shape_buckets=shape_buckets,
                                      max_batch_cap=max_batch_cap)
         # the serving-time feedback loop (opt-in): calibrate costs online,
-        # repartition behind an epoch fence, adapt batching knobs
+        # repartition / scale behind an epoch fence, adapt batching knobs
         self.controller = (Controller(self.dispatcher, controller)
                            if controller is not None else None)
         self._window_t0 = time.perf_counter()
+
+    @property
+    def topology(self) -> TopologySpec:
+        """The LIVE topology (tracks repartitions and scale events)."""
+        return self.dispatcher.topology
 
     def configure(self, params: dict) -> None:
         self.dispatcher.configure(params)
@@ -129,8 +152,9 @@ class InferenceEngine:
         """Admit a client's stream; yield results in submission order.
 
         Admission of sample i+1 overlaps compute of sample i — the yield
-        order (this client's FIFO) is guaranteed by awaiting futures in
-        submission order, independent of cross-client batching.  With a
+        order (this client's FIFO) is guaranteed twice over: futures are
+        awaited in submission order AND the collector's sequenced merge
+        resolves them in that order, replicated stages or not.  With a
         ``timeout``, admission raises :class:`AdmissionFull` instead of
         blocking past it (load shedding).
         """
@@ -140,6 +164,20 @@ class InferenceEngine:
                                        timeout=timeout))
         for fut in pending:
             yield fut.result()
+
+    # -- elastic membership ----------------------------------------------------
+    def scale(self, stage: int, replicas: int,
+              timeout: float | None = 60.0,
+              precompile: bool = False) -> dict:
+        """Grow or drain one stage's replica count on the RUNNING engine.
+
+        Rides the epoch fence: spawn ships the stage's weights to fresh
+        replicas and fences them into the routing set; drain fences them
+        out, flushes their in-flight work, and retires them.  Zero
+        requests are dropped or reordered per client either way.  Returns
+        the scale record (see :meth:`Dispatcher.scale`)."""
+        return self.dispatcher.scale(stage, replicas, timeout=timeout,
+                                     precompile=precompile)
 
     # -- blocking shim (the original API) ------------------------------------
     def run(self, inputs: Iterable[np.ndarray]) -> tuple[list[np.ndarray], EngineReport]:
@@ -180,83 +218,98 @@ class InferenceEngine:
         total_payload = 0.0
         total_overhead = 0.0
         total_energy = 0.0
-        for node in d.nodes:
-            with node._stats_lock:
-                tr = list(node.traces)
-                depths = list(node.queue_depths)
-                busy_dec = node.busy_decode_s
-                busy_cmp = node.busy_compute_s
-                busy_enc = node.busy_encode_s
-            n_req = sum(t.n for t in tr) or 1
-            compute = sum(t.compute_s for t in tr) / n_req
-            ser = sum(t.serialize_s for t in tr) / n_req
-            des = sum(t.deserialize_s for t in tr) / n_req
-            payload = sum(t.payload_bytes for t in tr) / n_req
-            chunks = max(1.0, np.ceil(payload / CHUNK_BYTES))
-            wire_s = self.link.latency_s * chunks \
-                + payload / self.link.bandwidth_bytes_per_s
-            # per-request service time: staged nodes overlap decode /
-            # compute / encode, so the pipelined bottleneck is the max
-            # stage, not the sum (paper: throughput = 1 / max_i service_i)
-            if node.staged:
-                service = max(compute, ser, des, wire_s)
-            else:
-                service = compute + ser + des + wire_s
-            energy = compute_energy_j(compute + ser + des, self.hw) \
-                + network_energy_j(payload, self.hw)
-            per_node.append({
-                "node": node.index, "compute_s": compute, "serialize_s": ser,
-                "deserialize_s": des, "wire_s": wire_s, "service_s": service,
-                "payload_bytes": payload, "energy_j": energy,
-                # the node's saturation = its busiest stage's fraction of
-                # the window (stages overlap, so summing them would let the
-                # old total-busy metric exceed 1.0 and get clamped)
-                "utilization": min(1.0, max(busy_dec, busy_cmp, busy_enc)
-                                   / util_wall),
-                "util_decode": min(1.0, busy_dec / util_wall),
-                "util_compute": min(1.0, busy_cmp / util_wall),
-                "util_encode": min(1.0, busy_enc / util_wall),
-                # raw (unclamped) busy fractions: can exceed 1.0 on an
-                # oversubscribed host (runnable-but-descheduled time books
-                # as busy) — the controller and BENCH notes read these to
-                # see oversubscription honestly; the clamped ones above
-                # stay for dashboards
-                "util_decode_raw": busy_dec / util_wall,
-                "util_compute_raw": busy_cmp / util_wall,
-                "util_encode_raw": busy_enc / util_wall,
-                "busy_decode_s": busy_dec,
-                "busy_compute_s": busy_cmp,
-                "busy_encode_s": busy_enc,
-                "max_batch": node.max_batch,
-                "coalesce_s": node.coalesce_s,
-                "layers": [n.name for n in node._nodes],
-                "queue_depth_mean": (float(np.mean(depths)) if depths
-                                     else 0.0),
-                "queue_depth_max": max(depths) if depths else 0,
-                "batch_mean": (float(np.mean([t.n for t in tr])) if tr
-                               else 0.0),
-                "encodes_per_batch": (float(np.mean([t.encodes for t in tr]))
-                                      if tr else 0.0),
-            })
-            bottleneck = max(bottleneck, service)
-            total_payload += payload
-            total_overhead += ser + des
-            total_energy += energy
+        num_nodes = 0
+        for group in d.stages:
+            stage_service = 0.0
+            live = group.live_replicas()
+            for node in live:
+                num_nodes += 1
+                with node._stats_lock:
+                    tr = list(node.traces)
+                    depths = list(node.queue_depths)
+                    busy_dec = node.busy_decode_s
+                    busy_cmp = node.busy_compute_s
+                    busy_enc = node.busy_encode_s
+                n_req = sum(t.n for t in tr) or 1
+                compute = sum(t.compute_s for t in tr) / n_req
+                ser = sum(t.serialize_s for t in tr) / n_req
+                des = sum(t.deserialize_s for t in tr) / n_req
+                payload = sum(t.payload_bytes for t in tr) / n_req
+                chunks = max(1.0, np.ceil(payload / CHUNK_BYTES))
+                wire_s = self.link.latency_s * chunks \
+                    + payload / self.link.bandwidth_bytes_per_s
+                # per-request service time: staged nodes overlap decode /
+                # compute / encode, so the pipelined per-replica bottleneck
+                # is the max stage, not the sum (paper: throughput =
+                # 1 / max_i service_i)
+                if node.staged:
+                    service = max(compute, ser, des, wire_s)
+                else:
+                    service = compute + ser + des + wire_s
+                energy = compute_energy_j(compute + ser + des, self.hw) \
+                    + network_energy_j(payload, self.hw)
+                per_node.append({
+                    "node": node.index, "stage": node.index,
+                    "replica": node.replica,
+                    "compute_s": compute, "serialize_s": ser,
+                    "deserialize_s": des, "wire_s": wire_s,
+                    "service_s": service,
+                    "payload_bytes": payload, "energy_j": energy,
+                    # the replica's saturation = its busiest stage's
+                    # fraction of the window (stages overlap, so summing
+                    # them would let the old total-busy metric exceed 1.0
+                    # and get clamped)
+                    "utilization": min(1.0, max(busy_dec, busy_cmp, busy_enc)
+                                       / util_wall),
+                    "util_decode": min(1.0, busy_dec / util_wall),
+                    "util_compute": min(1.0, busy_cmp / util_wall),
+                    "util_encode": min(1.0, busy_enc / util_wall),
+                    # raw (unclamped) busy fractions: can exceed 1.0 on an
+                    # oversubscribed host (runnable-but-descheduled time
+                    # books as busy) — the controller and BENCH notes read
+                    # these to see oversubscription honestly; the clamped
+                    # ones above stay for dashboards
+                    "util_decode_raw": busy_dec / util_wall,
+                    "util_compute_raw": busy_cmp / util_wall,
+                    "util_encode_raw": busy_enc / util_wall,
+                    "busy_decode_s": busy_dec,
+                    "busy_compute_s": busy_cmp,
+                    "busy_encode_s": busy_enc,
+                    "max_batch": node.max_batch,
+                    "coalesce_s": node.coalesce_s,
+                    "layers": [ln.name for ln in node._nodes],
+                    "queue_depth_mean": (float(np.mean(depths)) if depths
+                                         else 0.0),
+                    "queue_depth_max": max(depths) if depths else 0,
+                    "batch_mean": (float(np.mean([t.n for t in tr])) if tr
+                                   else 0.0),
+                    "encodes_per_batch": (float(np.mean(
+                        [t.encodes for t in tr])) if tr else 0.0),
+                })
+                stage_service = max(stage_service, service)
+                total_payload += payload
+                total_overhead += ser + des
+                total_energy += energy
+            # a replicated stage's contribution to the modeled pipeline
+            # bottleneck amortizes by its replica count (rate, not latency)
+            bottleneck = max(bottleneck,
+                             stage_service / max(1, len(live)))
         return EngineReport(
             model=d.graph.name,
-            num_nodes=len(d.nodes),
+            num_nodes=num_nodes,
             codec=d.codecs.data.label,
             samples=n,
             wall_s=wall,
             throughput_cps=n / wall if wall > 0 else 0.0,
             modeled_throughput_cps=(1.0 / bottleneck if bottleneck > 0
                                     else 0.0),
-            per_node_energy_j=total_energy / len(d.nodes),
+            per_node_energy_j=total_energy / max(1, num_nodes),
             overhead_s=total_overhead,
             payload_mb=total_payload / 1e6,
             p50_latency_s=lat.p50_s,
             p99_latency_s=lat.p99_s,
             per_node=per_node,
             cuts=tuple(d.partition.cuts),
+            replicas=d.replicas,
             epoch=d.epoch,
         )

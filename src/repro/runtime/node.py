@@ -1,8 +1,12 @@
 """A DEFER compute node (paper Algorithm 2) as a 3-stage internal pipeline.
 
-Each node owns: an incoming FIFO queue (its listening socket), a reference
-to the next node's queue (its outgoing socket), and — after the
-configuration step — a materialized model partition.  The paper's
+Each node is one REPLICA of one topology stage: it owns an incoming FIFO
+channel (its listening socket — a :class:`~repro.runtime.transport.Channel`
+from the stage's transport binding), a reference to the next stage's input
+channel (its outgoing socket), and — after the configuration step — a
+materialized model partition.  Replicas of the same stage are identical;
+the stage's router spreads work across them and this node neither knows
+nor cares whether it has siblings.  The paper's
 THREAD-1/THREAD-2 pair is generalized into three stages connected by
 depth-2 bounded queues (double buffering), so codec work overlaps compute:
 
@@ -47,11 +51,18 @@ import jax
 import numpy as np
 
 from repro.core.graph import LayerGraph, LayerNode
+from repro.runtime.transport import Channel, InprocChannel
 from repro.runtime.wire import (BatchEnvelope, ReconfigMarker, RowExtent,
                                 WireCodec, WireRecord, slice_parts,
                                 tree_unflatten_paths)
 
 _STOP = object()
+# _RETIRE drains ONE replica out of a stage without touching the rest of
+# the chain: it flows through the replica's internal stages like _STOP —
+# so everything already in its queues completes and relays — but the
+# egress exits WITHOUT forwarding it downstream, so the next stage's
+# _STOP accounting never sees a retired replica.
+_RETIRE = object()
 
 
 @dataclasses.dataclass
@@ -120,9 +131,12 @@ class ComputeNode:
                  pad_batches: bool = True, staged: bool = True,
                  stage_depth: int = 2, coalesce_s: float = 0.005,
                  shape_buckets: str = "exact",
-                 max_batch_cap: int | None = None):
-        self.index = index
-        self.data_codec = data_codec
+                 max_batch_cap: int | None = None,
+                 replica: int = 0,
+                 inbox: Channel | None = None):
+        self.index = index              # stage index (ReconfigMarker plans
+        self.replica = replica          # are keyed by it); replica id within
+        self.data_codec = data_codec    # the stage
         # max_batch and coalesce_s are ADAPTIVE knobs: the serving
         # controller retunes them online from the measured codec/compute
         # stage-time ratio (plain attribute writes; each wave re-reads them)
@@ -140,8 +154,12 @@ class ComputeNode:
         # inside a serving window
         self.max_batch_cap = max(self.max_batch, max_batch_cap or 0)
         self.epoch = 0              # last ReconfigMarker this node committed
-        self.inbox: queue.Queue = queue.Queue(maxsize=queue_depth)
-        self.next_inbox: queue.Queue | None = None
+        self.retiring = False       # drained by scale(), flushing until the
+                                    # fence + retire token clear its queues
+        self.inbox: Channel = inbox if inbox is not None \
+            else InprocChannel(queue_depth)
+        self.next_inbox: Channel | None = None
+        self._egress_epoch = 0      # epoch stamp for outbound envelopes
         self._to_compute: queue.Queue = queue.Queue(maxsize=max(1, stage_depth))
         self._to_encode: queue.Queue = queue.Queue(maxsize=max(1, stage_depth))
         # an item popped for a wave/merge that would overflow max_batch is
@@ -166,6 +184,7 @@ class ComputeNode:
         self.config_records: list[WireRecord] = []
         self._graph: LayerGraph | None = None
         self._nodes: list[LayerNode] = []
+        self._pad_safe = True
         self._params: dict | None = None
         self._required: list[str] = []
         self._exported: list[str] = []
@@ -218,6 +237,11 @@ class ComputeNode:
         self._required = graph.crossing_names(lo - 1) if lo > 0 else [""]
         self._exported = (graph.crossing_names(hi - 1) if hi < len(graph.nodes)
                           else [graph.nodes[-1].name])
+        # pow2 pad-to-shape assumes every layer in the slice preserves and
+        # acts independently along padded middle axes; a single pad-unsafe
+        # layer (attention over the padded axis) makes this segment fall
+        # back to exact bucketing
+        self._pad_safe = all(n.pad_safe for n in self._nodes)
 
     def _apply_reconfig(self, marker: ReconfigMarker) -> None:
         """Commit a live repartition at the epoch fence (compute stage).
@@ -324,8 +348,14 @@ class ComputeNode:
             t.start()
 
     def stop(self) -> None:
-        self.inbox.put(_STOP)
+        self.inbox.send(_STOP)
         self.join()
+
+    def retire(self) -> None:
+        """Queue the single-replica drain token (see ``_RETIRE``).  The
+        caller fences routing first; everything already in this replica's
+        queues still completes and relays before the threads exit."""
+        self.inbox.send(_RETIRE)
 
     def join(self) -> None:
         for t in self._threads:
@@ -375,6 +405,7 @@ class ComputeNode:
             waves = len(self.traces)
             return {
                 "node": self.index,
+                "replica": self.replica,
                 "n": self._trace_n,
                 "compute_s": self._trace_compute_s,
                 "serialize_s": self._trace_serialize_s,
@@ -408,9 +439,9 @@ class ComputeNode:
             env = self._ingress_pending
             self._ingress_pending = None
             if env is None:
-                env = self.inbox.get()
-            if env is _STOP:
-                self._to_compute.put(_STOP)
+                env = self.inbox.recv()
+            if env is _STOP or env is _RETIRE:
+                self._to_compute.put(env)
                 return
             if isinstance(env, ReconfigMarker):
                 # the epoch fence rides the FIFO: decode is partition-
@@ -419,11 +450,11 @@ class ComputeNode:
                 continue
             wave = [env]
             n_parts = env.n if env.error is None else 0
-            saw_stop = False
+            saw_stop = None
             deadline = None
             while n_parts < self.max_batch:
                 try:
-                    nxt = self.inbox.get_nowait()
+                    nxt = self.inbox.recv_nowait()
                 except queue.Empty:
                     # downstream still chewing on the previous wave: a
                     # bounded coalescing window grows this wave instead of
@@ -437,11 +468,11 @@ class ComputeNode:
                     if now >= deadline:
                         break
                     try:
-                        nxt = self.inbox.get(timeout=deadline - now)
+                        nxt = self.inbox.recv(timeout=deadline - now)
                     except queue.Empty:
                         continue
-                if nxt is _STOP:
-                    saw_stop = True
+                if nxt is _STOP or nxt is _RETIRE:
+                    saw_stop = nxt
                     break
                 if isinstance(nxt, ReconfigMarker):
                     # close the wave at the fence; the marker leads the
@@ -483,8 +514,8 @@ class ComputeNode:
                 self._to_compute.put(env)
             if decoded:
                 self._to_compute.put(decoded)
-            if saw_stop:
-                self._to_compute.put(_STOP)
+            if saw_stop is not None:
+                self._to_compute.put(saw_stop)
                 return
 
     # -- stage 2: compute (merge, bucket, stack, apply) -----------------------
@@ -494,8 +525,8 @@ class ComputeNode:
             self._compute_pending = None
             if item is None:
                 item = self._to_compute.get()
-            if item is _STOP:
-                self._to_encode.put(_STOP)
+            if item is _STOP or item is _RETIRE:
+                self._to_encode.put(item)
                 return
             if isinstance(item, ReconfigMarker):
                 # the fence reached the compute stage: swap partitions NOW
@@ -510,14 +541,14 @@ class ComputeNode:
             # waves, up to max_batch requests, without waiting for arrivals
             group = list(item)
             n_parts = sum(len(d.extents) for d in group)
-            saw_stop = False
+            saw_stop = None
             while n_parts < self.max_batch:
                 try:
                     nxt = self._to_compute.get_nowait()
                 except queue.Empty:
                     break
-                if nxt is _STOP:
-                    saw_stop = True
+                if nxt is _STOP or nxt is _RETIRE:
+                    saw_stop = nxt
                     break
                 if isinstance(nxt, ReconfigMarker):
                     self._compute_pending = nxt    # fence: no merging across
@@ -542,8 +573,8 @@ class ComputeNode:
                 self._to_encode.put(env)
             if out is not None:
                 self._to_encode.put(out)
-            if saw_stop:
-                self._to_encode.put(_STOP)
+            if saw_stop is not None:
+                self._to_encode.put(saw_stop)
                 return
 
     def _pad_to_bucket(self, d: _Decoded) -> _Decoded:
@@ -601,7 +632,10 @@ class ComputeNode:
         sizes, so e.g. ragged sequence lengths merge into ONE apply instead
         of one bucket each; the original sizes ride the extents
         (``pad_trim``) and the tail collector trims them back out."""
-        if self.shape_buckets == "pow2":
+        if self.shape_buckets == "pow2" and self._pad_safe:
+            # only when every layer in this replica's slice is pad_safe:
+            # a segment containing e.g. attention over the middle axis
+            # would see padded positions, so it stays on exact bucketing
             group = [self._pad_to_bucket(d) for d in group]
         n = sum(len(d.extents) for d in group)
         des_s = sum(d.deserialize_s for d in group)
@@ -638,14 +672,27 @@ class ComputeNode:
     def _egress_loop(self) -> None:
         while True:
             item = self._to_encode.get()
+            if item is _RETIRE:
+                # single-replica drain: exit WITHOUT forwarding — the
+                # downstream stage must not count a retired replica's stop
+                return
             if item is _STOP:
                 if self.next_inbox is not None:
-                    self.next_inbox.put(_STOP)
+                    self.next_inbox.send(_STOP)
                 return
-            if isinstance(item, (BatchEnvelope, ReconfigMarker)):
-                # error passthrough / epoch fence: relay in order
+            if isinstance(item, ReconfigMarker):
+                # epoch fence: everything encoded after this point was
+                # computed on the new partition — stamp it so the next
+                # stage's router can hold it behind its own fence barrier
+                self._egress_epoch = item.epoch
                 if self.next_inbox is not None:
-                    self.next_inbox.put(item)
+                    self.next_inbox.send(item)
+                continue
+            if isinstance(item, BatchEnvelope):
+                # error passthrough: relay in order, stamped
+                item.epoch = self._egress_epoch
+                if self.next_inbox is not None:
+                    self.next_inbox.send(item)
                 continue
             # book only codec time as encode busy; the relay puts can block
             # on the next node's bounded inbox (backpressure, not work)
@@ -657,13 +704,15 @@ class ComputeNode:
                     blob, rec = self.data_codec.encode_tree(
                         res, "data", request_id=extents[0].request_id,
                         client_id=extents[0].client_id)
-                    env = BatchEnvelope(extents, blob)
+                    env = BatchEnvelope(extents, blob,
+                                        epoch=self._egress_epoch)
                     item.trace.serialize_s += rec.encode_s
                     item.trace.payload_bytes += rec.wire_bytes
                     item.trace.encodes += 1
                 except Exception:
                     env = BatchEnvelope(extents, b"",
-                                        error=traceback.format_exc())
+                                        error=traceback.format_exc(),
+                                        epoch=self._egress_epoch)
                 enc_busy += time.perf_counter() - t0
                 out_envs.append(env)
             with self._stats_lock:
@@ -671,7 +720,7 @@ class ComputeNode:
                 self._record_trace(item.trace)
             if self.next_inbox is not None:
                 for env in out_envs:
-                    self.next_inbox.put(env)
+                    self.next_inbox.send(env)
 
     # -- unstaged path (the PR 1 baseline, kept for A/B benchmarks) -----------
     def _legacy_loop(self) -> None:
@@ -680,26 +729,33 @@ class ComputeNode:
         ``benchmarks/serve_load.py`` can measure the staged pipeline against
         the same-codec PR 1 baseline in one process."""
         while True:
-            item = self.inbox.get()
+            item = self.inbox.recv()
+            if item is _RETIRE:
+                return                   # drain this replica only: no relay
             if item is _STOP:
                 if self.next_inbox is not None:
-                    self.next_inbox.put(_STOP)
+                    self.next_inbox.send(_STOP)
                 return
             if isinstance(item, ReconfigMarker):
                 self._apply_reconfig(item)
+                self._egress_epoch = item.epoch
                 if self.next_inbox is not None:
-                    self.next_inbox.put(item)
+                    self.next_inbox.send(item)
                 continue
             batch = [item]
             saw_stop = False
+            retire = False
             marker = None
             while sum(e.n for e in batch) < self.max_batch:
                 try:
-                    nxt = self.inbox.get_nowait()
+                    nxt = self.inbox.recv_nowait()
                 except queue.Empty:
                     break
                 if nxt is _STOP:
                     saw_stop = True
+                    break
+                if nxt is _RETIRE:
+                    retire = True
                     break
                 if isinstance(nxt, ReconfigMarker):
                     marker = nxt         # fence: swap after this batch
@@ -710,14 +766,18 @@ class ComputeNode:
             outs = self.process_batch(batch)
             if self.next_inbox is not None:
                 for env in outs:
-                    self.next_inbox.put(env)
+                    env.epoch = self._egress_epoch
+                    self.next_inbox.send(env)
             if marker is not None:
                 self._apply_reconfig(marker)
+                self._egress_epoch = marker.epoch
                 if self.next_inbox is not None:
-                    self.next_inbox.put(marker)
+                    self.next_inbox.send(marker)
+            if retire:
+                return
             if saw_stop:
                 if self.next_inbox is not None:
-                    self.next_inbox.put(_STOP)
+                    self.next_inbox.send(_STOP)
                 return
 
     def process_batch(self, envs: list[BatchEnvelope]) -> list[BatchEnvelope]:

@@ -1,0 +1,260 @@
+"""Per-stage routing for replicated topologies.
+
+A :class:`StageGroup` owns one topology stage: its replicas, its inbound
+channel, and a router thread that spreads work across the replicas.  The
+groups of consecutive stages chain through the stage input channels:
+
+    pump -> [router 0] -> replica inboxes (stage 0)
+                           each replica egress -> stage 1 input channel
+         -> [router 1] -> replica inboxes (stage 1)
+                           ...
+         -> result channel -> collector
+
+Routing policies: ``"rr"`` (round-robin) and ``"lqd"`` (least queue
+depth — the default; ties break round-robin, so a homogeneous idle stage
+degrades gracefully to rr).
+
+**The fence barrier.** With one replica per stage the chain is a single
+FIFO and a :class:`~repro.runtime.wire.ReconfigMarker` can never be
+overtaken.  Replication breaks that: a fast replica may emit post-fence
+envelopes while a slow sibling still drains pre-fence work.  Each router
+therefore runs a counting barrier per epoch: it forwards the fence to its
+own replicas only after receiving one copy from EVERY upstream replica,
+and envelopes stamped ahead of its current epoch
+(:attr:`BatchEnvelope.epoch`) are held until that barrier completes.
+Pre-fence stragglers (stamped at or below the current epoch) keep flowing
+during the barrier — holding them would deadlock the very backlog the
+barrier waits for.
+
+**Elastic membership.** ``Dispatcher.scale`` stages a pending membership
+change (spawned replicas to add, draining replicas to retire) keyed by the
+fence epoch; the router applies it exactly when the fence passes: spawned
+replicas join the broadcast + routing set at the fence (so the downstream
+barrier count includes them), draining replicas receive the fence (flushing
+their in-flight work), are removed from the routing set, and get a
+``_RETIRE`` token queued behind the fence — they finish everything already
+routed to them and exit without signaling downstream.  Zero requests are
+dropped, reordered (the collector's sequenced merge), or recomputed.
+
+``fence_info`` is the cross-stage contract: before broadcasting epoch ``e``
+the router records how many marker copies the downstream barrier must
+expect and how many members will remain after — the downstream router (or
+the tail collector) reads exactly that.  The same count bookkeeping makes
+``_STOP`` exact: a shutdown broadcast reaches every live replica, each
+forwards one stop, and the downstream barrier knows how many to await.
+"""
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING
+
+from repro.runtime.node import _RETIRE, _STOP, ComputeNode
+from repro.runtime.transport import Channel
+from repro.runtime.wire import BatchEnvelope, ReconfigMarker
+
+if TYPE_CHECKING:
+    from repro.runtime.topology import StageSpec
+
+
+class FenceTally:
+    """Counting state for the markers and stops one consumer receives from
+    an upstream replica set — shared by every stage router and the tail
+    collector, so the barrier/stop accounting exists exactly once.
+
+    A drained replica forwards its fence copy but never a stop, and the
+    fence lowers ``expected_stops`` when its barrier completes — possibly
+    AFTER the last live replica's stop already arrived, so the consumer
+    must re-check :attr:`stopped` after every completed barrier, not only
+    on stop receipt (otherwise shutdown racing an in-flight drain fence
+    deadlocks)."""
+
+    def __init__(self, upstream_members: int):
+        self.expected_stops = upstream_members
+        self.stops = 0
+        self._marks: dict[int, int] = {}
+        self._barrier: dict[int, tuple[int, int]] = {}
+
+    @property
+    def stopped(self) -> bool:
+        return self.stops >= self.expected_stops
+
+    def on_stop(self) -> bool:
+        """Record one _STOP; True once every upstream member stopped."""
+        self.stops += 1
+        return self.stopped
+
+    def on_marker(self, epoch: int,
+                  upstream: "StageGroup | None") -> bool:
+        """Record one fence copy; True exactly when the barrier for
+        ``epoch`` completes (at which point all pre-fence traffic from
+        every upstream replica has been received, and ``expected_stops``
+        reflects the post-fence membership)."""
+        self._marks[epoch] = self._marks.get(epoch, 0) + 1
+        if epoch not in self._barrier:
+            # first copy of this fence: learn the barrier size (recorded
+            # by the upstream router before it broadcast, so this read
+            # can never race ahead of the write)
+            self._barrier[epoch] = ((1, 1) if upstream is None
+                                    else upstream.fence_info(epoch))
+        need, after = self._barrier[epoch]
+        if self._marks[epoch] < need:
+            return False
+        del self._marks[epoch], self._barrier[epoch]
+        self.expected_stops = after
+        return True
+
+
+class StageGroup:
+    """One stage of the topology: replicas + router + fence bookkeeping."""
+
+    def __init__(self, index: int, spec: "StageSpec",
+                 replicas: list[ComputeNode], input_channel: Channel,
+                 upstream: "StageGroup | None",
+                 fail_batch=None):
+        self.index = index
+        self.spec = spec
+        self.replicas = replicas            # all live replicas (stats view)
+        self.input = input_channel
+        self.upstream = upstream            # None = fed by the pump
+        self.routing = spec.routing
+        # (extents, error=str) callback: a routing failure (a transport
+        # send raising) fails exactly the affected requests' futures
+        # instead of silently killing the router thread and hanging every
+        # client — mirroring the per-batch isolation inside ComputeNode
+        self.fail_batch = fail_batch
+        # epoch -> (markers the DOWNSTREAM barrier must count, members
+        # remaining after the fence).  Written before the broadcast, read
+        # by the next router / the collector when its barrier trips.
+        self._fence_info: dict[int, tuple[int, int]] = {}
+        # epoch -> (replicas to add, replicas to retire) at that fence
+        self._pending: dict[int, tuple[list[ComputeNode],
+                                       list[ComputeNode]]] = {}
+        self._info_lock = threading.Lock()
+        self._thread: threading.Thread | None = None
+
+    # -- cross-stage contract -------------------------------------------------
+    def fence_info(self, epoch: int) -> tuple[int, int]:
+        """(expected marker count, members after) for a fence this stage
+        broadcast — consumed once by the downstream barrier."""
+        with self._info_lock:
+            return self._fence_info.pop(epoch)
+
+    def stage_membership(self, epoch: int, adds: list[ComputeNode],
+                         drops: list[ComputeNode]) -> None:
+        """Queue a membership change to apply when fence ``epoch`` passes
+        this stage's router."""
+        with self._info_lock:
+            self._pending[epoch] = (adds, drops)
+
+    def upstream_members(self) -> int:
+        return 1 if self.upstream is None else len(self.upstream.replicas)
+
+    def live_replicas(self) -> list[ComputeNode]:
+        """Current members for stats/pricing: prunes replicas retired by
+        a drain once their threads exit.  An un-acked drain leaves a
+        retiree in ``replicas`` while it flushes (its telemetry is still
+        real); once dead it must go, or its frozen snapshot epoch makes
+        the controller rebaseline forever and its ghost membership
+        inflates capacity pricing."""
+        with self._info_lock:
+            for node in [r for r in self.replicas if r.retiring]:
+                if not any(t.is_alive() for t in node._threads):
+                    self.replicas.remove(node)
+            return list(self.replicas)
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._thread = threading.Thread(target=self._route_loop, daemon=True)
+        self._thread.start()
+
+    def join(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+
+    # -- the router thread ----------------------------------------------------
+    def _route_loop(self) -> None:
+        members = list(self.replicas)       # the routing set (thread-local)
+        rr = 0
+        current_epoch = 0
+        tally = FenceTally(self.upstream_members())
+        held: list[BatchEnvelope] = []
+
+        def route(env: BatchEnvelope) -> None:
+            nonlocal rr
+            if len(members) == 1:
+                members[0].inbox.send(env)
+                return
+            if self.routing == "lqd":
+                depth = [m.inbox.qsize() for m in members]
+                lo = min(depth)
+                # ties (and the idle case) rotate round-robin
+                pick = min((i for i, d in enumerate(depth) if d == lo),
+                           key=lambda i: (i - rr) % len(members))
+            else:
+                pick = rr % len(members)
+            rr = (pick + 1) % len(members)
+            members[pick].inbox.send(env)
+
+        while True:
+            item = self.input.recv()
+            if item is _STOP:
+                if not tally.on_stop():
+                    continue
+                for m in members:
+                    m.inbox.send(_STOP)
+                return
+            if isinstance(item, ReconfigMarker):
+                e = item.epoch
+                if not tally.on_marker(e, self.upstream):
+                    continue
+                # barrier complete: every upstream replica flushed the
+                # fence, so all pre-fence work has arrived here
+                with self._info_lock:
+                    adds, drops = self._pending.pop(e, ([], []))
+                members.extend(adds)
+                with self._info_lock:
+                    # record BEFORE broadcasting — the downstream barrier
+                    # reads this when the first forwarded copy lands
+                    self._fence_info[e] = (len(members),
+                                           len(members) - len(drops))
+                for m in members:
+                    m.inbox.send(item)
+                for m in drops:
+                    members.remove(m)
+                    m.retire()          # queued behind the fence: flush+exit
+                current_epoch = e
+                if held:
+                    ready = [env for env in held if env.epoch <= e]
+                    held = [env for env in held if env.epoch > e]
+                    for env in ready:
+                        try:
+                            route(env)
+                        except Exception:
+                            import traceback
+                            if self.fail_batch is not None:
+                                self.fail_batch(env.extents,
+                                                error=traceback.format_exc())
+                if tally.stopped:
+                    # shutdown raced an in-flight drain fence: the last
+                    # live stop arrived BEFORE this barrier lowered the
+                    # expectation (the drained replica never stops), so
+                    # re-check here or nobody ever will
+                    for m in members:
+                        m.inbox.send(_STOP)
+                    return
+                continue
+            env = item
+            if env.epoch > current_epoch:
+                held.append(env)            # post-fence overtaker: hold at
+                continue                    # the barrier
+            try:
+                route(env)
+            except Exception:
+                # fail exactly this batch's futures and keep routing —
+                # a dying router would silently hang every client
+                import traceback
+                if self.fail_batch is not None:
+                    self.fail_batch(env.extents,
+                                    error=traceback.format_exc())

@@ -1,0 +1,115 @@
+"""Pluggable transports: the link between DEFER runtime entities.
+
+Every hop in the serving topology — pump -> stage router, router -> replica
+inbox, replica egress -> next stage, last stage -> collector — is a
+:class:`Channel` obtained from a :class:`Transport`.  The wire *format*
+(:class:`~repro.runtime.wire.BatchEnvelope` framing) is transport-agnostic;
+a transport only moves already-encoded items between endpoints, so a socket
+or emulated-link backend can slot in per stage without touching the codec
+or batching layers.  Stage specs select a transport by name
+(:class:`~repro.runtime.topology.StageSpec.transport`); new backends
+register with :func:`register_transport`.
+
+The in-process default is a bounded thread-safe queue — exactly the
+structure the chain used before transports existed, so the staged-relay
+backpressure semantics (a full channel blocks the sender) are unchanged.
+``recv_nowait``/``recv(timeout=)`` raise :class:`queue.Empty`, mirroring
+the stdlib so the node stage loops keep their idioms.
+"""
+from __future__ import annotations
+
+import queue
+from typing import Any, Callable
+
+Empty = queue.Empty
+
+
+class Channel:
+    """One directed edge between runtime entities.
+
+    ``send`` blocks when the channel is at capacity (backpressure is the
+    runtime's flow control); ``recv`` blocks until an item arrives.  Items
+    are opaque to the channel: envelopes, fence markers, and the stop
+    token all ride the same FIFO, which is what makes the epoch fence
+    ordering argument work on any transport that preserves per-channel
+    FIFO delivery.
+    """
+
+    def send(self, item: Any) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: float | None = None) -> Any:
+        raise NotImplementedError
+
+    def recv_nowait(self) -> Any:
+        raise NotImplementedError
+
+    def qsize(self) -> int:
+        """Queued-item count, used as the least-queue-depth routing signal.
+        Backends without cheap introspection keep this default: 0 for
+        every channel makes lqd degrade gracefully to round-robin."""
+        return 0
+
+
+class InprocChannel(Channel):
+    """The default transport's channel: a bounded in-process queue."""
+
+    def __init__(self, capacity: int = 0):
+        self._q: queue.Queue = queue.Queue(maxsize=capacity)
+
+    def send(self, item: Any) -> None:
+        self._q.put(item)
+
+    def recv(self, timeout: float | None = None) -> Any:
+        return self._q.get(timeout=timeout)
+
+    def recv_nowait(self) -> Any:
+        return self._q.get_nowait()
+
+    def qsize(self) -> int:
+        return self._q.qsize()
+
+
+class Transport:
+    """A channel factory.  Subclasses back channels with a different
+    medium (sockets, an emulated lossy/slow link, shared memory)."""
+
+    name = "abstract"
+
+    def channel(self, capacity: int = 0) -> Channel:
+        raise NotImplementedError
+
+
+class InprocTransport(Transport):
+    name = "inproc"
+
+    def channel(self, capacity: int = 0) -> Channel:
+        return InprocChannel(capacity)
+
+
+_TRANSPORTS: dict[str, Callable[[], Transport]] = {
+    "inproc": InprocTransport,
+}
+_INSTANCES: dict[str, Transport] = {}
+
+
+def register_transport(name: str, factory: Callable[[], Transport]) -> None:
+    """Make ``name`` usable as a :class:`StageSpec.transport` binding."""
+    _TRANSPORTS[name] = factory
+    _INSTANCES.pop(name, None)          # a re-registration replaces state
+
+
+def get_transport(name: str) -> Transport:
+    """One shared instance per name: a stateful backend (socket listener,
+    connection pool, emulated-link clock) keeps its state across every
+    channel it backs; spec validation gets the same instance with no
+    side effects."""
+    try:
+        inst = _INSTANCES.get(name)
+        if inst is None:
+            inst = _INSTANCES[name] = _TRANSPORTS[name]()
+        return inst
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {name!r}; registered: "
+            f"{sorted(_TRANSPORTS)}") from None

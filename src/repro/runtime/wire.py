@@ -100,6 +100,13 @@ class BatchEnvelope:
     extents: list[RowExtent]
     blob: bytes
     error: str | None = None
+    # partition epoch the producing stage was on when it encoded this
+    # envelope.  With replicated stages the chain is no longer one global
+    # FIFO: a fast replica can emit post-fence output while a slow sibling
+    # still drains pre-fence work, so the next stage's router HOLDS any
+    # envelope stamped ahead of its own epoch until the fence barrier
+    # completes — no request ever sees a mixed-epoch chain.
+    epoch: int = 0
 
     @property
     def n(self) -> int:
@@ -155,11 +162,19 @@ class ReconfigMarker:
     the old partition at every node, every envelope behind it by the new
     one — each node swaps exactly when the marker passes its compute
     stage, so no in-flight request ever sees a mixed chain and none is
-    dropped or recomputed.  The tail collector observes the marker to
+    dropped or recomputed.  With replicated stages, each stage's router
+    broadcasts the marker to every replica and the NEXT stage's router
+    (or the tail collector) runs a counting barrier — the fence advances
+    only once every replica has flushed it, and post-fence envelopes from
+    fast replicas are held at the barrier (``BatchEnvelope.epoch``).
+    Membership changes (spawn/drain of replicas) ride the same fence:
+    the affected stage's router applies its pending membership exactly
+    when the marker passes, so elasticity inherits the zero-loss
+    guarantee.  The tail collector observes the completed barrier to
     acknowledge the epoch switch chain-wide."""
 
     epoch: int
-    plans: dict[int, NodePlan]          # node index -> its new assignment
+    plans: dict[int, NodePlan]          # stage index -> its new assignment
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,7 +11,8 @@ import pytest
 
 from repro.core.graph import LayerGraph
 from repro.runtime import (AdmissionFull, ControllerConfig, CostCalibrator,
-                           InferenceEngine, decide_repartition, suggest_knobs)
+                           InferenceEngine, TopologySpec, decide_repartition,
+                           decide_scale, suggest_knobs)
 from repro.runtime.dispatcher import (DispatcherCodecs,
                                       _WeightedAdmissionQueue)
 from repro.runtime.node import _STOP
@@ -251,7 +252,8 @@ def test_live_repartition_zero_loss_fifo_under_load():
     chain's threads survive."""
     g = mlp_graph(8)
     params = g.init(jax.random.PRNGKey(0))
-    eng = InferenceEngine(g, 3, RAW, max_batch=4, cuts=(5, 7))
+    eng = InferenceEngine(g, TopologySpec.chain(g, 3, cuts=(5, 7)), RAW,
+                          max_batch=4)
     eng.configure(params)
     eng.start()
     per_client, n_clients = 14, 3

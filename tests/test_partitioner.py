@@ -223,6 +223,47 @@ def test_calibrated_staged_prefers_overlap_aware_cuts():
     assert seq > got                           # overlap is what buys it
 
 
+def test_replica_pricing_amortizes_rate_not_latency():
+    """Replicas divide a stage's throughput contribution (compute+codec),
+    never a request's own service time."""
+    g = chain_graph([1e6] * 8)
+    p = partition(g, 2, cuts=(4,), replicas=(1, 2))
+    assert p.replicas == (1, 2)
+    s0, s1 = p.stages
+    assert s1.throughput_service_s == pytest.approx(s1.service_time_s / 2)
+    assert s0.throughput_service_s == pytest.approx(s0.service_time_s)
+    # per-request bottleneck is replica-blind; the throughput one amortizes
+    assert p.bottleneck_s == max(s0.service_time_s, s1.service_time_s)
+    assert p.throughput_bottleneck_s <= p.bottleneck_s
+    with pytest.raises(ValueError):
+        partition(g, 2, cuts=(4,), replicas=(1, 2, 3))
+
+
+def test_calibrated_replica_pricing():
+    costs = _costs([1.0] * 8, enc=0.1, dec=0.1)
+    one = costs.stage_service_s(0, 4)
+    assert costs.stage_service_s(0, 4, replicas=2) == pytest.approx(one / 2)
+    # bounds_bottleneck prices the replicated topology
+    b = [0, 4, 8]
+    assert bounds_bottleneck(costs, b, replicas=[2, 2]) == pytest.approx(
+        bounds_bottleneck(costs, b) / 2)
+
+
+def test_calibrated_dp_leans_layers_into_replicated_stage():
+    """With stage 1 at 2 replicas, the replica-aware DP hands it ~2x the
+    layers of stage 0 — a replica-blind plan would split evenly."""
+    costs = _costs([1.0] * 9)
+    blind, _ = calibrated_partition(costs, 2)
+    aware, aware_b = calibrated_partition(costs, 2, replicas=[1, 2])
+    assert blind[1] in (4, 5)
+    assert aware[1] == 3                       # 3 layers vs 6/2 = 3 each
+    assert aware_b == pytest.approx(3.0)
+    # and the replica-aware plan is optimal under the replica ruler
+    best = min(bounds_bottleneck(costs, [0, c, 9], replicas=[1, 2])
+               for c in range(1, 9))
+    assert aware_b <= best + 1e-12
+
+
 def test_resnet_partition_reassembly_exact():
     from repro.models.cnn import resnet50
     g = resnet50(batch=1)
