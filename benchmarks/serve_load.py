@@ -44,12 +44,17 @@ async with zfp/q8 at >= 4 nodes x 8 clients (ISSUE 2), controller >=
 1.3x static on the skewed chain with ZFP/LZ4 (ISSUE 3), and replicated
 bottleneck measurably above the 1-replica plan with zero drops (ISSUE 4).
 
+Every scenario accepts ``--transport`` (ISSUE 5): ``inproc`` (default),
+``tcp`` (every chain hop over real loopback sockets with byte framing and
+credit-window backpressure), or an emulated link such as
+``link:10mbit,20ms`` reproducing the paper's CORE network conditions.
+
     PYTHONPATH=src python benchmarks/serve_load.py --nodes 4 --clients 8 \
         --codec zfp --min-staged-speedup 1.5
     PYTHONPATH=src python benchmarks/serve_load.py --rebalance \
         --codec zfp_lz4 --min-rebalance-speedup 1.3
-    PYTHONPATH=src python benchmarks/serve_load.py --elastic
-    PYTHONPATH=src python benchmarks/serve_load.py --smoke
+    PYTHONPATH=src python benchmarks/serve_load.py --elastic --transport tcp
+    PYTHONPATH=src python benchmarks/serve_load.py --smoke --transport tcp
 """
 from __future__ import annotations
 
@@ -57,6 +62,7 @@ import argparse
 import dataclasses
 import json
 import os
+import re
 import threading
 import time
 
@@ -226,16 +232,18 @@ MODES = (
 
 def run(nodes: int = 4, clients: int = 8, samples: int = 16,
         codec: str = "zfp", repeats: int = 2, depth: int = DEPTH,
-        d: int = D, seq: int = SEQ) -> list[dict]:
+        d: int = D, seq: int = SEQ,
+        transport: str = "inproc") -> list[dict]:
     g = serving_mlp(depth, d, seq)
     params = g.init(jax.random.PRNGKey(0))
     wire = CODECS[codec]
+    spec = TopologySpec.chain(g, nodes, transport=transport)
     # the PR 1 modes run the PR 1 codec implementations; `staged` runs the
     # vectorized hot paths (both sides of the A/B are the code they claim)
     wire_pr1 = dataclasses.replace(wire, vectorized=False)
     rows = []
     for mode, max_batch, serialize, staged in MODES:
-        eng = build_engine(g, params, nodes, max_batch, clients,
+        eng = build_engine(g, params, spec, max_batch, clients,
                            wire if staged else wire_pr1, staged)
         warmup(eng, clients, seq, d, serialize=serialize)
         wall, rep, errs = _measure(eng, clients, samples, seq, d, repeats,
@@ -244,6 +252,7 @@ def run(nodes: int = 4, clients: int = 8, samples: int = 16,
         assert not errs, errs
         rows.append({
             "mode": mode, "codec": rep.codec, "nodes": nodes,
+            "transport": transport,
             "clients": clients, "samples": clients * samples,
             "wall_s": wall,
             "throughput_rps": rep.throughput_cps,
@@ -314,7 +323,7 @@ def run_rebalance(nodes: int = 4, clients: int = 8, samples: int = 16,
                   codec: str = "zfp_lz4", repeats: int = 2,
                   d: int = D, wide: int = 2 * D, narrow: int = D // 4,
                   seq: int = SEQ, converge_s: float = 90.0,
-                  smoke: bool = False) -> dict:
+                  smoke: bool = False, transport: str = "inproc") -> dict:
     """Static equal_layers vs controller-enabled serving on the skewed
     chain.  Both start from the SAME (bad) plan; only the controller may
     calibrate, migrate, and retune knobs.  Returns the full result dict
@@ -324,9 +333,10 @@ def run_rebalance(nodes: int = 4, clients: int = 8, samples: int = 16,
     wire = CODECS[codec]
     rows = []
 
-    # int topology = TopologySpec.chain(g, nodes): the paper's 1-replica
-    # equal_layers chain — the deliberately bad static plan
-    eng = build_engine(g, params, nodes, 8, clients, wire, True)
+    # the paper's 1-replica equal_layers chain — the deliberately bad
+    # static plan — on the selected transport backend
+    spec = TopologySpec.chain(g, nodes, transport=transport)
+    eng = build_engine(g, params, spec, 8, clients, wire, True)
     static_cuts = tuple(eng.dispatcher.partition.cuts)
     warmup(eng, clients, seq, narrow)
     wall, rep, errs = _measure(eng, clients, samples, seq, narrow, repeats)
@@ -337,7 +347,7 @@ def run_rebalance(nodes: int = 4, clients: int = 8, samples: int = 16,
     cfg = ControllerConfig(interval_s=0.25, min_requests=2 * clients,
                            cooldown_s=1.0, hysteresis=0.25,
                            ewma_alpha=0.5)
-    eng = build_engine(g, params, nodes, 8, clients, wire, True,
+    eng = build_engine(g, params, spec, 8, clients, wire, True,
                        max_batch_cap=32, controller=cfg)
     warmup(eng, clients, seq, narrow)
     # convergence phase: serve until the controller commits a migration
@@ -369,6 +379,7 @@ def run_rebalance(nodes: int = 4, clients: int = 8, samples: int = 16,
     return {
         "config": {"nodes": nodes, "clients": clients,
                    "samples_per_client": samples, "codec": codec,
+                   "transport": transport,
                    "model": f"skewed-chain d={d} wide={wide} "
                             f"narrow={narrow} seq={seq} depth=16",
                    "static_cuts": static_cuts,
@@ -461,7 +472,7 @@ def elastic_chain(narrow: int = 64, wide: int = 1024, seq: int = SEQ,
 def run_elastic(clients: int = 24, samples: int = 8,
                 codec: str = "zfp_lz4", repeats: int = 2,
                 narrow: int = 64, wide: int = 1024, seq: int = SEQ,
-                max_replicas: int = 3) -> dict:
+                max_replicas: int = 3, transport: str = "inproc") -> dict:
     """1 -> N replicas on the bottleneck stage, scaled under load.
 
     Stage 0 is one widening layer whose egress ENCODES the wide
@@ -481,7 +492,7 @@ def run_elastic(clients: int = 24, samples: int = 8,
     d = narrow
     params = g.init(jax.random.PRNGKey(0))
     wire = CODECS[codec]
-    spec = TopologySpec.chain(g, 2, cuts=(1,))
+    spec = TopologySpec.chain(g, 2, cuts=(1,), transport=transport)
     eng = build_engine(g, params, spec, 8, clients, wire, True)
     bottleneck = 0                              # the wide-encoding stage
     warmup(eng, clients, seq, d)
@@ -529,7 +540,7 @@ def run_elastic(clients: int = 24, samples: int = 8,
     emit("serve_elastic", rows)
     return {
         "config": {"clients": clients, "samples_per_client": samples,
-                   "codec": codec,
+                   "codec": codec, "transport": transport,
                    "model": f"elastic-chain narrow={narrow} wide={wide} "
                             f"seq={seq}",
                    "topology": f"2 stages, cut after layer 1 (stage 0 = "
@@ -571,6 +582,15 @@ def run_elastic(clients: int = 24, samples: int = 8,
     }
 
 
+def _bench_suffix(transport: str) -> str:
+    """Per-transport BENCH file suffix: 'inproc' keeps the bare name, any
+    other binding (including distinct link shapes) records side by side
+    — link:10mbit,20ms -> '_link_10mbit_20ms'."""
+    if transport == "inproc":
+        return ""
+    return "_" + re.sub(r"[^A-Za-z0-9]+", "_", transport).strip("_")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=4)
@@ -587,6 +607,11 @@ def main() -> None:
                          "encode)")
     ap.add_argument("--repeats", type=int, default=2,
                     help="measured windows per mode; fastest is reported")
+    ap.add_argument("--transport", default="inproc",
+                    help="channel backend for every stage: inproc "
+                         "(default), tcp (real loopback sockets), or an "
+                         "emulated link like link:10mbit,20ms — the "
+                         "paper's CORE network conditions (ISSUE 5)")
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="exit nonzero if async/sync < this (ISSUE 1 bar)")
     ap.add_argument("--min-staged-speedup", type=float, default=0.0,
@@ -610,12 +635,14 @@ def main() -> None:
     if args.smoke:
         # small model, 2 nodes, raw codec: exercises admission, staging,
         # batch wire framing, the controller step, and a live repartition
+        # (--transport tcp runs the whole gate over real loopback sockets)
         rows = run(nodes=2, clients=2, samples=3, codec="raw", repeats=1,
-                   depth=6, d=64, seq=16)
+                   depth=6, d=64, seq=16, transport=args.transport)
         emit("serve_load_smoke", rows)
         res = run_rebalance(nodes=2, clients=2, samples=3, codec="raw",
                             repeats=1, d=64, wide=128, narrow=16, seq=16,
-                            converge_s=10.0, smoke=True)
+                            converge_s=10.0, smoke=True,
+                            transport=args.transport)
         assert res["zero_dropped"]
         # a live repartition MUST have happened (controller-decided or the
         # forced smoke fence) and lost nothing — this is the plumbing the
@@ -624,14 +651,16 @@ def main() -> None:
         # the elastic plumbing too: spawn + drain a replica under load
         # (tiny config, seconds) with zero dropped requests
         eres = run_elastic(clients=2, samples=3, codec="raw", repeats=1,
-                           narrow=16, wide=64, seq=16, max_replicas=2)
+                           narrow=16, wide=64, seq=16, max_replicas=2,
+                           transport=args.transport)
         assert eres["zero_dropped"], eres
         # the ladder went 1 -> 2 -> 1: a spawn AND a drain both fenced
         # through a loaded chain
         assert any(r["replicas"] == "2x1" for r in eres["rows"]), eres
         assert eres["rows"][-1]["replicas"] == "1x1", eres["rows"][-1]
         assert eres["rows"][-1]["epoch"] == 2, eres["rows"][-1]
-        print(f"smoke ok: staged {rows[-1]['throughput_rps']:.1f} req/s, "
+        print(f"smoke ok ({args.transport}): "
+              f"staged {rows[-1]['throughput_rps']:.1f} req/s, "
               f"rebalance epoch {res['rows'][1]['epoch']}, "
               f"controller {res['rows'][1]['throughput_rps']:.1f} req/s, "
               f"elastic {eres['rows'][0]['throughput_rps']:.1f} -> "
@@ -640,7 +669,8 @@ def main() -> None:
 
     if args.elastic:
         res = run_elastic(args.clients or 24, args.samples or 8,
-                          args.codec or "zfp_lz4", args.repeats)
+                          args.codec or "zfp_lz4", args.repeats,
+                          transport=args.transport)
         res = {"benchmark": "benchmarks/serve_load.py --elastic",
                "date": time.strftime("%Y-%m-%d"),
                "host": f"{os.cpu_count()}-core CPU container, "
@@ -656,7 +686,8 @@ def main() -> None:
                              f"zero_dropped (asserted)",
                },
                **res}
-        with open("BENCH_elastic.json", "w") as f:
+        with open(f"BENCH_elastic{_bench_suffix(args.transport)}.json",
+                  "w") as f:
             json.dump(res, f, indent=2, default=str)
         print(f"elastic speedup: {res['speedup']:.2f}x at "
               f"{res['best_replicas']} replicas (zero dropped: asserted)")
@@ -674,7 +705,7 @@ def main() -> None:
     if args.rebalance:
         res = run_rebalance(args.nodes, args.clients or 8,
                             args.samples or 16, args.codec or "zfp_lz4",
-                            args.repeats)
+                            args.repeats, transport=args.transport)
         res = {"benchmark": "benchmarks/serve_load.py --rebalance",
                "date": time.strftime("%Y-%m-%d"),
                "host": f"{os.cpu_count()}-core CPU container, "
@@ -690,7 +721,8 @@ def main() -> None:
                              f"{res['zero_dropped']}",
                },
                **res}
-        with open("BENCH_rebalance.json", "w") as f:
+        with open(f"BENCH_rebalance{_bench_suffix(args.transport)}.json",
+                  "w") as f:
             json.dump(res, f, indent=2, default=str)
         print(f"controller/static speedup: {res['speedup']:.2f}x "
               f"(epoch {res['rows'][1]['epoch']}, "
@@ -704,7 +736,8 @@ def main() -> None:
         return
 
     rows = run(args.nodes, args.clients or 8, args.samples or 16,
-               args.codec or "zfp", args.repeats)
+               args.codec or "zfp", args.repeats,
+               transport=args.transport)
     emit("serve_load", rows)
     by_mode = {r["mode"]: r for r in rows}
     s_async = by_mode["async"]["speedup_vs_sync"]

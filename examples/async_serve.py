@@ -65,7 +65,10 @@ params = graph.init(jax.random.PRNGKey(0))
 
 # 1. spec: the partitioner picks the cuts; the heaviest stage starts with
 #    2 replicas (a hand-built spec could instead list explicit StageSpecs
-#    with per-stage layer ranges, transports, and knob overrides)
+#    with per-stage layer ranges, transports, and knob overrides).
+#    transport="tcp" would put every hop on real loopback sockets, and
+#    transport="link:10mbit,20ms" on the paper's emulated Ethernet — the
+#    serving code below is identical either way
 spec = TopologySpec.chain(graph, STAGES, strategy="balanced_latency")
 heavy = max(range(STAGES),
             key=lambda i: spec.stages[i].layers[1] - spec.stages[i].layers[0])

@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.core import codecs
 from repro.core.graph import LayerGraph, tree_bytes
-from repro.core.metrics import EDGE, HardwareProfile, compute_energy_j, network_energy_j
+from repro.core.metrics import (EDGE, HardwareProfile, compute_energy_j,
+                                idle_energy_j, network_energy_j)
 from repro.core.partitioner import LinkModel, Partition, partition
 
 CHUNK_BYTES = 512 * 1024  # paper: 512 kB chunked transfer
@@ -105,17 +106,28 @@ class StageReport:
     deserialize_s: float
     transfer_s: float
     payload_bytes: int
-    energy_j: float
+    energy_j: float                  # active (work) energy, whole stage
+    replicas: int = 1                # identical nodes serving this stage
+    idle_energy_j: float = 0.0       # baseline burn of the stage's nodes
+    #                                  while waiting on the bottleneck
 
     @property
     def service_s(self) -> float:
+        """Per-request service latency (replication never shortens one
+        request's own path)."""
         return self.compute_s + self.serialize_s + self.deserialize_s + self.transfer_s
+
+    @property
+    def rate_service_s(self) -> float:
+        """The stage's contribution to the pipeline bottleneck: replicas
+        split the request stream, so the *rate* amortizes by 1/replicas."""
+        return self.service_s / max(1, self.replicas)
 
 
 @dataclasses.dataclass
 class EmulationReport:
     model: str
-    num_nodes: int
+    num_nodes: int                   # total nodes incl. replicas
     codec: str
     throughput_cps: float            # inference cycles / second
     single_device_cps: float
@@ -124,6 +136,8 @@ class EmulationReport:
     total_payload_mb: float          # per inference cycle
     overhead_s: float                # total serialization time per cycle
     stages: list[StageReport]
+    replicas: tuple = ()             # per-stage replica counts ((), pre-
+    #                                  replica shape, when not requested)
 
     @property
     def speedup(self) -> float:
@@ -150,14 +164,31 @@ def emulate(graph: LayerGraph, num_nodes: int,
             hw: HardwareProfile = EDGE,
             link: LinkModel | None = None,
             strategy: str = "equal_layers",
-            seed: int = 0) -> EmulationReport:
-    """Emulate DEFER steady state for ``graph`` on ``num_nodes`` compute nodes."""
+            seed: int = 0,
+            replicas: Sequence[int] | None = None) -> EmulationReport:
+    """Emulate DEFER steady state for ``graph`` on ``num_nodes`` compute
+    stages.
+
+    ``replicas`` (per-stage counts, SEIFER-style replicated partitions)
+    adds the replica dimension: the pipeline bottleneck amortizes each
+    stage's service time by its replica count (rate, never a request's
+    own latency), ``num_nodes`` becomes the total node count, and energy
+    gains the idle term the paper's per-node measurement implies — every
+    replica of a non-bottleneck stage sits idle part of each cycle, and a
+    powered-on idle node still draws ``hw.idle_w``.  ``replicas=None``
+    (default) reproduces the pre-replica report exactly.
+    """
     cfg = cfg or CodecConfig()
     link = link or LinkModel(bandwidth_bytes_per_s=hw.link_bw,
                              energy_per_bit_j=hw.energy_per_bit_j)
     from repro.core.partitioner import ComputeModel
     comp = ComputeModel(flops_per_s=hw.peak_flops, tdp_w=hw.tdp_w)
-    part = partition(graph, num_nodes, strategy=strategy, link=link, compute=comp)
+    reps = list(replicas) if replicas is not None else None
+    if reps is not None and len(reps) != num_nodes:
+        raise ValueError(f"{len(reps)} replica counts for "
+                         f"{num_nodes} stages")
+    part = partition(graph, num_nodes, strategy=strategy, link=link,
+                     compute=comp, replicas=reps)
 
     stages: list[StageReport] = []
     outbound: list[WireMeasurement] = []
@@ -185,11 +216,25 @@ def emulate(graph: LayerGraph, num_nodes: int,
             transfer_s=transfer_s,
             payload_bytes=wm.wire_bytes,
             energy_j=energy,
+            replicas=reps[si] if reps is not None else 1,
         ))
         outbound.append(wm)
 
-    bottleneck = max(s.service_s for s in stages)
+    # steady-state cycle time: the slowest stage RATE (service amortized
+    # by replicas; with replicas=None this is exactly max service_s)
+    bottleneck = max(s.rate_service_s for s in stages)
     throughput = 1.0 / bottleneck
+
+    total_nodes = sum(reps) if reps is not None else num_nodes
+    if reps is not None:
+        # idle burn per cycle: each replica of stage i works
+        # (compute+codec)/replicas seconds of a cycle and idles the rest —
+        # the paper's per-node baseline that over-provisioning pays for
+        for s in stages:
+            active_per_replica = (s.compute_s + s.serialize_s
+                                  + s.deserialize_s) / s.replicas
+            s.idle_energy_j = s.replicas * idle_energy_j(
+                bottleneck - active_per_replica, hw)
 
     # single-device baseline: whole graph on one node, no wire codecs
     single_compute_s = graph.total_flops / hw.peak_flops
@@ -198,15 +243,17 @@ def emulate(graph: LayerGraph, num_nodes: int,
 
     return EmulationReport(
         model=graph.name,
-        num_nodes=num_nodes,
+        num_nodes=total_nodes,
         codec=cfg.label,
         throughput_cps=throughput,
         single_device_cps=single_cps,
-        per_node_energy_j=sum(s.energy_j for s in stages) / num_nodes,
+        per_node_energy_j=sum(s.energy_j + s.idle_energy_j
+                              for s in stages) / total_nodes,
         single_device_energy_j=single_energy,
         total_payload_mb=sum(s.payload_bytes for s in stages) / 1e6,
         overhead_s=sum(s.serialize_s + s.deserialize_s for s in stages),
         stages=stages,
+        replicas=tuple(reps) if reps is not None else (),
     )
 
 

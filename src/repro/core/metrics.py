@@ -22,6 +22,18 @@ class HardwareProfile:
     link_bw: float                 # bytes/s per link
     tdp_w: float
     energy_per_bit_j: float
+    # baseline draw of a powered-on node doing nothing (W).  The paper's
+    # per-node energy is measured on nodes that exist whether or not they
+    # are busy — an IDLE replica of an over-provisioned stage still burns
+    # this.  Default 0 keeps every pre-replica energy figure unchanged;
+    # replica-aware accounting (emulate(replicas=...) / EngineReport
+    # idle_energy_j) prices it when a profile sets it.
+    idle_w: float = 0.0
+
+
+def idle_energy_j(idle_s: float, hw: HardwareProfile) -> float:
+    """Baseline burn of a powered-on but idle node over ``idle_s``."""
+    return max(0.0, idle_s) * hw.idle_w
 
 
 EDGE = HardwareProfile(

@@ -6,9 +6,12 @@ from repro.runtime.dispatcher import (AdmissionFull,  # noqa: F401
                                       Dispatcher, DispatcherCodecs, NodeError)
 from repro.runtime.engine import EngineReport, InferenceEngine  # noqa: F401
 from repro.runtime.topology import StageSpec, TopologySpec  # noqa: F401
-from repro.runtime.transport import (Channel, InprocTransport,  # noqa: F401
-                                     Transport, get_transport,
-                                     register_transport)
+from repro.runtime.transport import (Channel, ChannelClosed,  # noqa: F401
+                                     InprocTransport, LinkTransport,
+                                     TcpTransport, Transport, get_transport,
+                                     register_transport,
+                                     register_transport_scheme)
 from repro.runtime.wire import (BatchEnvelope, Envelope,  # noqa: F401
                                 NodePlan, ReconfigMarker, RowExtent,
-                                WireCodec, WireRecord)
+                                WireCodec, WireFormatError, WireRecord,
+                                frame, unframe)

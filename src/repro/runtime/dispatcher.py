@@ -48,9 +48,10 @@ from repro.core.partitioner import LinkModel, Partition, partition
 from repro.runtime.node import _STOP, ComputeNode
 from repro.runtime.router import FenceTally, StageGroup
 from repro.runtime.topology import TopologySpec
-from repro.runtime.transport import Channel, get_transport
+from repro.runtime.transport import Channel, ChannelClosed, get_transport
 from repro.runtime.wire import (BatchEnvelope, NodePlan, ReconfigMarker,
-                                RowExtent, WireCodec, WireRecord, slice_parts)
+                                RowExtent, WireCodec, WireRecord,
+                                slice_parts, validate_client_id)
 
 
 class AdmissionFull(Exception):
@@ -173,12 +174,17 @@ class Dispatcher:
 
         # wiring: per stage, an input channel (fed by the pump or by the
         # previous stage's replicas) and a router spreading it across the
-        # stage's replicas; the last stage feeds the collector's channel
+        # stage's replicas; the last stage feeds the collector's channel.
+        # Every channel this dispatcher opens is tracked so shutdown can
+        # close it — returning it to its transport's live count (a
+        # re-registration of the transport name is refused while channels
+        # are live) and releasing socket/link resources
+        self._channels: list[Channel] = []
         self._stage_inputs: list[Channel] = [
-            get_transport(s.transport).channel(queue_depth)
+            self._open_channel(s.transport, queue_depth)
             for s in topology.stages]
-        self.result_channel: Channel = get_transport(
-            topology.stages[-1].transport).channel(0)
+        self.result_channel: Channel = self._open_channel(
+            topology.stages[-1].transport, 0)
         self.stages: list[StageGroup] = []
         for i, spec in enumerate(topology.stages):
             replicas = [self._make_node(i, r) for r in range(spec.replicas)]
@@ -222,6 +228,7 @@ class Dispatcher:
         self._configured = False
         self._started = False
         self._closed = False
+        self._tail_dead = False        # set when the result channel dies
         # live-mutation state: reconfigure()/scale() are serialized, the
         # epoch counts committed fences, and the event acknowledges the
         # fence barrier completing at the tail (chain-wide swap done)
@@ -236,6 +243,11 @@ class Dispatcher:
         # routers' FenceTally accounting
         self._tail = FenceTally(len(self.stages[-1].replicas))
 
+    def _open_channel(self, transport: str, capacity: int) -> Channel:
+        ch = get_transport(transport).channel(capacity)
+        self._channels.append(ch)
+        return ch
+
     def _make_node(self, stage: int, replica: int) -> ComputeNode:
         """One replica of one stage, with the stage spec's overrides
         applied over the engine-wide defaults."""
@@ -248,7 +260,7 @@ class Dispatcher:
             staged=d["staged"],
             shape_buckets=spec.shape_buckets or d["shape_buckets"],
             max_batch_cap=spec.max_batch_cap or d["max_batch_cap"],
-            inbox=get_transport(spec.transport).channel(d["queue_depth"]))
+            inbox=self._open_channel(spec.transport, d["queue_depth"]))
         if spec.coalesce_s is not None:
             node.coalesce_s = spec.coalesce_s
         return node
@@ -334,9 +346,17 @@ class Dispatcher:
         while True:
             env = self.admission.get()
             if env is _STOP:
-                head.send(_STOP)
+                try:
+                    head.send(_STOP)
+                except Exception:
+                    pass                # head link dead: nothing to stop
                 return
-            head.send(env)
+            try:
+                head.send(env)
+            except Exception:
+                # dead head link: fail exactly this request's futures and
+                # keep pumping (mirrors the router's per-batch isolation)
+                self._finish_batch(env.extents, error=traceback.format_exc())
 
     def _collect(self) -> None:
         """Tail of the topology -> per-request futures, released in
@@ -348,9 +368,27 @@ class Dispatcher:
         marker barrier over the last stage's replicas and acknowledges the
         epoch chain-wide."""
         while True:
-            item = self.result_channel.recv()
+            try:
+                item = self.result_channel.recv()
+            except ChannelClosed:
+                # tail link dead: no result can ever arrive again — fail
+                # every unresolved future NOW (a silent return would hang
+                # every blocked client and shutdown's drain forever) and
+                # refuse new admissions
+                self._fail_all_pending(
+                    "result channel closed: the chain's tail link died")
+                return
             if item is _STOP:
                 if self._tail.on_stop():
+                    if not self._closed:
+                        # a stop cascade the dispatcher did not initiate:
+                        # a mid-chain link died and its router flushed the
+                        # chain out.  Everything still in flight is
+                        # undeliverable — fail it (and further submits)
+                        # instead of exiting with clients left hanging
+                        self._fail_all_pending(
+                            "the chain stopped unexpectedly (a mid-chain "
+                            "link died); request undeliverable")
                     return
                 continue
             if isinstance(item, ReconfigMarker):
@@ -368,6 +406,10 @@ class Dispatcher:
                     # shutdown raced an in-flight drain fence of the last
                     # stage (see FenceTally): the retired replica never
                     # stops, so the last live stop may precede this fence
+                    if not self._closed:
+                        self._fail_all_pending(
+                            "the chain stopped unexpectedly (a mid-chain "
+                            "link died); request undeliverable")
                     return
                 continue
             env: BatchEnvelope = item
@@ -435,6 +477,31 @@ class Dispatcher:
             else:
                 fut.set_result(res)
 
+    def _fail_all_pending(self, reason: str) -> None:
+        """Terminal failure path: the chain can no longer deliver results
+        (tail link dead).  Every unresolved future — registered or held
+        in the sequenced merge — fails with :class:`NodeError`, the merge
+        state is cleared so ``drain``/``shutdown`` complete, and further
+        submits are refused."""
+        with self._lock:
+            self._tail_dead = True
+            failed = list(self._futures.values())
+            self._futures.clear()
+            for hold in self._client_hold.values():
+                failed.extend(entry[0] for entry in hold.values())
+            self._client_hold.clear()
+            self._client_cancel.clear()
+            self._client_next.clear()
+            self._client_seq.clear()
+            self._client_inflight.clear()
+            self._inflight = 0
+            self._idle.notify_all()
+        for fut in failed:
+            try:
+                fut.set_exception(NodeError(reason))
+            except Exception:
+                pass                    # already resolved: nothing owed
+
     def _finish_batch(self, extents: list[RowExtent],
                       results: list | None = None,
                       error: str | None = None) -> None:
@@ -473,6 +540,9 @@ class Dispatcher:
         """
         if not self._started:
             self.start()
+        # reject ids the byte framing can't carry HERE, not as a relay
+        # failure mid-chain on whichever stage binds a socket transport
+        validate_client_id(client_id)
         fut: Future = Future()
         # one locked section registers the request: any submit that passed
         # the closed check is visible to shutdown() via _admitting/_inflight,
@@ -480,6 +550,10 @@ class Dispatcher:
         with self._lock:
             if self._closed:
                 raise RuntimeError("dispatcher is shut down")
+            if self._tail_dead:
+                raise RuntimeError(
+                    "the chain can no longer deliver results (a link "
+                    "died); restart the engine")
             if self.client_quota is not None \
                     and self._client_inflight[client_id] >= self.client_quota:
                 raise AdmissionFull(
@@ -809,3 +883,10 @@ class Dispatcher:
                 node.join()
         if self._collect_thread:
             self._collect_thread.join()
+        # every thread is down: release the channels (sockets, link
+        # clocks) and return them to their transports' live counts
+        for ch in self._channels:
+            try:
+                ch.close()
+            except Exception:
+                pass

@@ -52,7 +52,8 @@ import numpy as np
 
 from repro.core.graph import LayerGraph
 from repro.core.metrics import (EDGE, HardwareProfile, LatencySummary,
-                                compute_energy_j, network_energy_j)
+                                compute_energy_j, idle_energy_j,
+                                network_energy_j)
 from repro.core.partitioner import LinkModel
 from repro.runtime.controller import Controller, ControllerConfig
 from repro.runtime.dispatcher import Dispatcher, DispatcherCodecs
@@ -230,7 +231,8 @@ class InferenceEngine:
                     busy_dec = node.busy_decode_s
                     busy_cmp = node.busy_compute_s
                     busy_enc = node.busy_encode_s
-                n_req = sum(t.n for t in tr) or 1
+                n_req_raw = sum(t.n for t in tr)
+                n_req = n_req_raw or 1
                 compute = sum(t.compute_s for t in tr) / n_req
                 ser = sum(t.serialize_s for t in tr) / n_req
                 des = sum(t.deserialize_s for t in tr) / n_req
@@ -248,6 +250,20 @@ class InferenceEngine:
                     service = compute + ser + des + wire_s
                 energy = compute_energy_j(compute + ser + des, self.hw) \
                     + network_energy_j(payload, self.hw)
+                # replica-aware idle burn: a powered-on replica draws the
+                # profile's baseline for every second of the window it is
+                # NOT doing work — the cost an over-provisioned stage pays
+                # per node that active-energy accounting alone hides.
+                # Amortized per inference cycle (the window's request
+                # count) so it adds in the same per-cycle units as the
+                # active energy above; busy time is capped at the window
+                # (three overlapped stage threads can book more than wall
+                # on an oversubscribed host).  idle_w defaults to 0, so
+                # every pre-replica energy figure is unchanged.
+                busy_total = busy_dec + busy_cmp + busy_enc
+                idle_energy = idle_energy_j(
+                    util_wall - min(busy_total, util_wall),
+                    self.hw) / max(1, n)
                 per_node.append({
                     "node": node.index, "stage": node.index,
                     "replica": node.replica,
@@ -255,6 +271,8 @@ class InferenceEngine:
                     "deserialize_s": des, "wire_s": wire_s,
                     "service_s": service,
                     "payload_bytes": payload, "energy_j": energy,
+                    "idle_energy_j": idle_energy,
+                    "requests": n_req_raw,
                     # the replica's saturation = its busiest stage's
                     # fraction of the window (stages overlap, so summing
                     # them would let the old total-busy metric exceed 1.0
@@ -289,7 +307,14 @@ class InferenceEngine:
                 stage_service = max(stage_service, service)
                 total_payload += payload
                 total_overhead += ser + des
-                total_energy += energy
+                # per-CYCLE units: a replica's energy_j is per request IT
+                # processed, and a replicated stage's replicas each see
+                # only a share of the window's cycles — weight by that
+                # share so the chain total prices each cycle's work once
+                # (a 1-replica stage sees every request: share = 1,
+                # figures unchanged).  idle_energy is already per cycle.
+                total_energy += energy * (n_req_raw / max(1, n)) \
+                    + idle_energy
             # a replicated stage's contribution to the modeled pipeline
             # bottleneck amortizes by its replica count (rate, not latency)
             bottleneck = max(bottleneck,

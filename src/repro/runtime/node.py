@@ -51,18 +51,19 @@ import jax
 import numpy as np
 
 from repro.core.graph import LayerGraph, LayerNode
-from repro.runtime.transport import Channel, InprocChannel
-from repro.runtime.wire import (BatchEnvelope, ReconfigMarker, RowExtent,
-                                WireCodec, WireRecord, slice_parts,
-                                tree_unflatten_paths)
-
-_STOP = object()
+from repro.runtime.transport import Channel, ChannelClosed, InprocChannel
+# _STOP / _RETIRE live in wire.py so the byte framing can map them to
+# dedicated frame types (a socket transport must carry them too); they are
+# re-exported here because the runtime modules treat this as their home.
 # _RETIRE drains ONE replica out of a stage without touching the rest of
 # the chain: it flows through the replica's internal stages like _STOP —
 # so everything already in its queues completes and relays — but the
 # egress exits WITHOUT forwarding it downstream, so the next stage's
 # _STOP accounting never sees a retired replica.
-_RETIRE = object()
+from repro.runtime.wire import (_RETIRE, _STOP,  # noqa: F401
+                                BatchEnvelope, ReconfigMarker, RowExtent,
+                                WireCodec, WireRecord, slice_parts,
+                                tree_unflatten_paths)
 
 
 @dataclasses.dataclass
@@ -439,7 +440,17 @@ class ComputeNode:
             env = self._ingress_pending
             self._ingress_pending = None
             if env is None:
-                env = self.inbox.recv()
+                try:
+                    env = self.inbox.recv()
+                except ChannelClosed:
+                    # the inbound link died (socket reset / killed): this
+                    # replica can never receive again, so it retires —
+                    # everything already decoded flushes, nothing is
+                    # signaled downstream (the router proxies its control
+                    # tokens), and shutdown can still join its threads
+                    self.retiring = True
+                    self._to_compute.put(_RETIRE)
+                    return
             if env is _STOP or env is _RETIRE:
                 self._to_compute.put(env)
                 return
@@ -471,6 +482,14 @@ class ComputeNode:
                         nxt = self.inbox.recv(timeout=deadline - now)
                     except queue.Empty:
                         continue
+                    except ChannelClosed:
+                        self.retiring = True
+                        saw_stop = _RETIRE      # flush this wave, then exit
+                        break
+                except ChannelClosed:
+                    self.retiring = True
+                    saw_stop = _RETIRE
+                    break
                 if nxt is _STOP or nxt is _RETIRE:
                     saw_stop = nxt
                     break
@@ -669,6 +688,34 @@ class ComputeNode:
         return _Computed(outs, trace), failures
 
     # -- stage 3: egress (encode once per bucket, relay) ----------------------
+    def _relay(self, item: Any) -> None:
+        """Send one item downstream.
+
+        A DEAD downstream link (socket reset) is swallowed: the item is
+        lost either way — the chain is already severed past this hop —
+        and an egress thread dying on the send would leave the internal
+        queues undrained and deadlock shutdown on top of the network
+        failure.  Any OTHER send failure (e.g. a payload the byte framing
+        refuses) is per-batch: the envelope's extents travel on as an
+        error envelope so the collector fails exactly those futures
+        instead of the request silently hanging."""
+        if self.next_inbox is None:
+            return
+        try:
+            self.next_inbox.send(item)
+        except (ChannelClosed, OSError):
+            pass
+        except Exception:
+            if not isinstance(item, BatchEnvelope):
+                return          # tokens/markers always frame: link fault
+            try:
+                self.next_inbox.send(BatchEnvelope(
+                    item.extents, b"", error=traceback.format_exc(),
+                    epoch=item.epoch))
+            except Exception:
+                pass            # extents themselves unencodable: nothing
+                                # more this hop can signal
+
     def _egress_loop(self) -> None:
         while True:
             item = self._to_encode.get()
@@ -677,22 +724,19 @@ class ComputeNode:
                 # downstream stage must not count a retired replica's stop
                 return
             if item is _STOP:
-                if self.next_inbox is not None:
-                    self.next_inbox.send(_STOP)
+                self._relay(_STOP)
                 return
             if isinstance(item, ReconfigMarker):
                 # epoch fence: everything encoded after this point was
                 # computed on the new partition — stamp it so the next
                 # stage's router can hold it behind its own fence barrier
                 self._egress_epoch = item.epoch
-                if self.next_inbox is not None:
-                    self.next_inbox.send(item)
+                self._relay(item)
                 continue
             if isinstance(item, BatchEnvelope):
                 # error passthrough: relay in order, stamped
                 item.epoch = self._egress_epoch
-                if self.next_inbox is not None:
-                    self.next_inbox.send(item)
+                self._relay(item)
                 continue
             # book only codec time as encode busy; the relay puts can block
             # on the next node's bounded inbox (backpressure, not work)
@@ -718,9 +762,8 @@ class ComputeNode:
             with self._stats_lock:
                 self.busy_encode_s += enc_busy
                 self._record_trace(item.trace)
-            if self.next_inbox is not None:
-                for env in out_envs:
-                    self.next_inbox.send(env)
+            for env in out_envs:
+                self._relay(env)
 
     # -- unstaged path (the PR 1 baseline, kept for A/B benchmarks) -----------
     def _legacy_loop(self) -> None:
@@ -729,18 +772,20 @@ class ComputeNode:
         ``benchmarks/serve_load.py`` can measure the staged pipeline against
         the same-codec PR 1 baseline in one process."""
         while True:
-            item = self.inbox.recv()
+            try:
+                item = self.inbox.recv()
+            except ChannelClosed:
+                self.retiring = True     # dead inbound link: self-retire
+                return
             if item is _RETIRE:
                 return                   # drain this replica only: no relay
             if item is _STOP:
-                if self.next_inbox is not None:
-                    self.next_inbox.send(_STOP)
+                self._relay(_STOP)
                 return
             if isinstance(item, ReconfigMarker):
                 self._apply_reconfig(item)
                 self._egress_epoch = item.epoch
-                if self.next_inbox is not None:
-                    self.next_inbox.send(item)
+                self._relay(item)
                 continue
             batch = [item]
             saw_stop = False
@@ -750,6 +795,10 @@ class ComputeNode:
                 try:
                     nxt = self.inbox.recv_nowait()
                 except queue.Empty:
+                    break
+                except ChannelClosed:
+                    self.retiring = True
+                    retire = True        # flush this batch, then exit
                     break
                 if nxt is _STOP:
                     saw_stop = True
@@ -764,20 +813,17 @@ class ComputeNode:
             with self._stats_lock:
                 self._record_depth(len(batch) + self.inbox.qsize())
             outs = self.process_batch(batch)
-            if self.next_inbox is not None:
-                for env in outs:
-                    env.epoch = self._egress_epoch
-                    self.next_inbox.send(env)
+            for env in outs:
+                env.epoch = self._egress_epoch
+                self._relay(env)
             if marker is not None:
                 self._apply_reconfig(marker)
                 self._egress_epoch = marker.epoch
-                if self.next_inbox is not None:
-                    self.next_inbox.send(marker)
+                self._relay(marker)
             if retire:
                 return
             if saw_stop:
-                if self.next_inbox is not None:
-                    self.next_inbox.send(_STOP)
+                self._relay(_STOP)
                 return
 
     def process_batch(self, envs: list[BatchEnvelope]) -> list[BatchEnvelope]:

@@ -42,14 +42,27 @@ expect and how many members will remain after — the downstream router (or
 the tail collector) reads exactly that.  The same count bookkeeping makes
 ``_STOP`` exact: a shutdown broadcast reaches every live replica, each
 forwards one stop, and the downstream barrier knows how many to await.
+
+**Dead links.**  With a real socket transport a replica's inbox can die
+mid-serve (connection reset, :class:`ChannelClosed`).  The router then (1)
+fails exactly the affected batch's futures (the same per-batch isolation a
+compute error gets), (2) removes the member from the routing set so later
+traffic heals onto its siblings, and (3) keeps the member on a ``dead``
+list whose control tokens it *proxies*: when a fence or stop broadcast
+comes due, the router sends the dead member's copy directly into its
+downstream channel — the replica's own egress will never do it (its
+ingress self-retired on the closed channel) and the downstream barrier
+counts would otherwise wait forever.  The chain keeps serving, and
+shutdown still joins cleanly.
 """
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import TYPE_CHECKING
 
 from repro.runtime.node import _RETIRE, _STOP, ComputeNode
-from repro.runtime.transport import Channel
+from repro.runtime.transport import Channel, ChannelClosed
 from repro.runtime.wire import BatchEnvelope, ReconfigMarker
 
 if TYPE_CHECKING:
@@ -174,19 +187,100 @@ class StageGroup:
             self._thread.join()
 
     # -- the router thread ----------------------------------------------------
+    # in-flight ledger floor per member: outstanding items on a channel
+    # are bounded by its credit window (the stage queue_depth), so the
+    # per-member depth is that capacity with headroom — this floor only
+    # covers channels that do not expose a capacity
+    _LEDGER_DEPTH = 64
+
+    @classmethod
+    def _ledger_depth(cls, m: ComputeNode) -> int:
+        cap = getattr(m.inbox, "capacity", 0) or 0
+        return max(cls._LEDGER_DEPTH, 2 * cap)
+    # how long to wait for a dead member's threads to finish flushing
+    # before proxying its fence/stop downstream (normally milliseconds —
+    # the self-retire is immediate once the channel raises)
+    _FLUSH_JOIN_S = 5.0
+
     def _route_loop(self) -> None:
         members = list(self.replicas)       # the routing set (thread-local)
+        dead: list[ComputeNode] = []        # members with a dead inbox link
+        # per member: the last routed items' extents (None for control
+        # tokens), FIFO-aligned with the channel, so when a link dies the
+        # unconsumed tail (channel qsize, credit accounting) can be failed
+        # instead of leaving those batches' futures hanging forever
+        ledger: dict[int, deque] = {}
         rr = 0
         current_epoch = 0
         tally = FenceTally(self.upstream_members())
         held: list[BatchEnvelope] = []
 
+        def fail_extents(extents, why: str) -> None:
+            if self.fail_batch is not None:
+                self.fail_batch(extents, error=why)
+
+        def fail_stranded(m: ComputeNode) -> None:
+            """Fail the batches stranded in a dead link's buffers: the
+            unconsumed tail of its FIFO, counted by the channel's
+            outstanding credits.  A batch the replica had in fact already
+            consumed may be failed spuriously (its late result is then
+            ignored by the collector) — at-most-once on a dying link,
+            never a hang."""
+            try:
+                k = m.inbox.qsize()
+            except Exception:
+                k = 0
+            dq = ledger.pop(id(m), None)
+            if not k or not dq:
+                return
+            for entry in list(dq)[-k:]:
+                if entry is not None:
+                    fail_extents(
+                        entry,
+                        f"stage {self.index} replica {m.replica}: inbox "
+                        "link died with this batch in flight "
+                        "(undeliverable)")
+
+        def on_member_death(m: ComputeNode) -> None:
+            """Heal the routing set; the dead member's fence/stop copies
+            are proxied at the next broadcast."""
+            if m in members:
+                members.remove(m)
+                dead.append(m)
+            fail_stranded(m)
+
+        def member_send(m: ComputeNode, item, data: bool = False) -> bool:
+            """Send + ledger-record one item to a member.  A DEAD link
+            (ChannelClosed/OSError) heals the routing set and fails the
+            member's stranded batches — True/False tells the caller.  Any
+            other send failure on a DATA envelope (e.g. a payload the
+            framing refuses) propagates so the caller fails exactly that
+            batch WITHOUT retiring a healthy replica; for control tokens
+            (always frameable) any failure is link-shaped."""
+            try:
+                m.inbox.send(item)
+            except (ChannelClosed, OSError):
+                on_member_death(m)
+                return False
+            except Exception:
+                if data:
+                    raise
+                on_member_death(m)
+                return False
+            ledger.setdefault(id(m), deque(maxlen=self._ledger_depth(m))) \
+                .append(item.extents if isinstance(item, BatchEnvelope)
+                        else None)
+            return True
+
         def route(env: BatchEnvelope) -> None:
             nonlocal rr
+            if not members:
+                raise ChannelClosed(
+                    f"stage {self.index}: no live replicas (all inbox "
+                    "links dead)")
             if len(members) == 1:
-                members[0].inbox.send(env)
-                return
-            if self.routing == "lqd":
+                pick = 0
+            elif self.routing == "lqd":
                 depth = [m.inbox.qsize() for m in members]
                 lo = min(depth)
                 # ties (and the idle case) rotate round-robin
@@ -195,15 +289,54 @@ class StageGroup:
             else:
                 pick = rr % len(members)
             rr = (pick + 1) % len(members)
-            members[pick].inbox.send(env)
+            if not member_send(members[pick], env, data=True):
+                raise ChannelClosed("routed onto a dead link")
+
+        def broadcast(item) -> None:
+            """One control token to every member.  A member whose link
+            dies moves to ``dead``; every dead member's copy is proxied
+            into its downstream channel so the next stage's barrier/stop
+            counting stays exact (the dead replica's own egress will
+            never forward it — its ingress self-retired).  Before
+            proxying, the dead member's threads get a bounded join: once
+            they have exited, everything it flushed is already in the
+            downstream channel, so the proxied token cannot overtake its
+            pre-fence work (if the join times out — a wedged replica —
+            the proxy goes ahead rather than deadlocking the router)."""
+            for m in list(members):
+                member_send(m, item)
+            for m in dead:
+                for t in m._threads:
+                    t.join(self._FLUSH_JOIN_S)
+                try:
+                    if m.next_inbox is not None:
+                        m.next_inbox.send(item)
+                except Exception:
+                    pass                # downstream gone too: nothing owed
+
+        def fail(env: BatchEnvelope) -> None:
+            import traceback
+            fail_extents(env.extents, traceback.format_exc())
 
         while True:
-            item = self.input.recv()
+            try:
+                item = self.input.recv()
+            except ChannelClosed:
+                # the stage's input link died: nothing will ever arrive
+                # again — fail anything still held at a fence barrier (its
+                # fence can no longer complete), then flush the replicas
+                # out so shutdown can join them
+                for env in held:
+                    fail_extents(
+                        env.extents,
+                        f"stage {self.index}: input link died with this "
+                        "batch held at an epoch fence (undeliverable)")
+                broadcast(_STOP)
+                return
             if item is _STOP:
                 if not tally.on_stop():
                     continue
-                for m in members:
-                    m.inbox.send(_STOP)
+                broadcast(_STOP)
                 return
             if isinstance(item, ReconfigMarker):
                 e = item.epoch
@@ -216,14 +349,32 @@ class StageGroup:
                 members.extend(adds)
                 with self._info_lock:
                     # record BEFORE broadcasting — the downstream barrier
-                    # reads this when the first forwarded copy lands
-                    self._fence_info[e] = (len(members),
-                                           len(members) - len(drops))
-                for m in members:
-                    m.inbox.send(item)
+                    # reads this when the first forwarded copy lands.
+                    # Dead members count on both sides: their marker/stop
+                    # copies arrive downstream via the proxy.
+                    self._fence_info[e] = (
+                        len(members) + len(dead),
+                        len(members) - len(drops) + len(dead))
+                broadcast(item)
                 for m in drops:
-                    members.remove(m)
-                    m.retire()          # queued behind the fence: flush+exit
+                    if m in members:
+                        members.remove(m)
+                        try:
+                            m.retire()  # queued behind the fence: flush+exit
+                        except Exception:
+                            # link died since the broadcast: a dropped
+                            # member owes downstream nothing, but its
+                            # stranded batches must still fail (the
+                            # ledger is popped only on a clean retire —
+                            # fail_stranded needs it)
+                            fail_stranded(m)
+                        else:
+                            ledger.pop(id(m), None)     # clean exit
+                    elif m in dead:
+                        # a dead member can't flush; its fence copy was
+                        # proxied and its threads already self-retired —
+                        # dropping it just stops the stop-proxying
+                        dead.remove(m)
                 current_epoch = e
                 if held:
                     ready = [env for env in held if env.epoch <= e]
@@ -232,17 +383,13 @@ class StageGroup:
                         try:
                             route(env)
                         except Exception:
-                            import traceback
-                            if self.fail_batch is not None:
-                                self.fail_batch(env.extents,
-                                                error=traceback.format_exc())
+                            fail(env)
                 if tally.stopped:
                     # shutdown raced an in-flight drain fence: the last
                     # live stop arrived BEFORE this barrier lowered the
                     # expectation (the drained replica never stops), so
                     # re-check here or nobody ever will
-                    for m in members:
-                        m.inbox.send(_STOP)
+                    broadcast(_STOP)
                     return
                 continue
             env = item
@@ -254,7 +401,4 @@ class StageGroup:
             except Exception:
                 # fail exactly this batch's futures and keep routing —
                 # a dying router would silently hang every client
-                import traceback
-                if self.fail_batch is not None:
-                    self.fail_batch(env.extents,
-                                    error=traceback.format_exc())
+                fail(env)

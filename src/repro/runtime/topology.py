@@ -40,9 +40,12 @@ class StageSpec:
     (least-queue-depth, the default — adapts to replica jitter) or
     ``"rr"`` (strict round-robin).  ``transport`` names a registered
     :class:`~repro.runtime.transport.Transport` backing this stage's
-    channels.  ``max_batch`` / ``coalesce_s`` / ``shape_buckets`` /
-    ``max_batch_cap`` override the engine-wide defaults for this stage
-    only (None = inherit).
+    channels — ``"inproc"`` (default), ``"tcp"`` (real loopback sockets),
+    an emulated link like ``"link:10mbit,20ms"`` (the paper's CORE
+    conditions), or any backend registered with ``register_transport``;
+    stages may each bind a different one.  ``max_batch`` / ``coalesce_s``
+    / ``shape_buckets`` / ``max_batch_cap`` override the engine-wide
+    defaults for this stage only (None = inherit).
     """
 
     layers: tuple[int, int]                 # [lo, hi) over graph.nodes

@@ -23,6 +23,15 @@ config payloads share one format:
 collector demuxes results by; continuous batching may legally reorder
 requests of *different* clients, and a client's own results still come back
 FIFO because ``stream()`` awaits futures in submission order.
+
+**Channel-item framing.**  Everything that rides a runtime
+:class:`~repro.runtime.transport.Channel` — data envelopes, the epoch
+fence, and the ``_STOP``/``_RETIRE`` control tokens — round-trips through
+:func:`frame`/:func:`unframe`, a versioned byte format with **no pickle**:
+a socket or emulated-link transport moves exactly these bytes, so the
+chain's control plane survives a real wire.  A truncated or corrupt buffer
+raises :class:`WireFormatError` (never a bare ``struct.error``), which the
+node stages surface as a per-batch failure while the chain keeps serving.
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ import io
 import json
 import struct
 import time
+import warnings
 from typing import Any
 
 import numpy as np
@@ -38,6 +48,38 @@ import numpy as np
 from repro.core import codecs
 
 CHUNK_BYTES = 512 * 1024
+
+
+class WireFormatError(ValueError):
+    """A wire payload failed framing validation (truncated, corrupt, or
+    version-mismatched).  Raised instead of leaking ``struct.error`` /
+    bare ``ValueError`` from the codec internals, so a dropped socket or
+    a bit-flipped blob fails exactly the affected batch as a
+    :class:`~repro.runtime.dispatcher.NodeError` instead of killing a
+    stage thread mid-loop."""
+
+
+class _Token:
+    """A chain control token (identity-compared singleton).  Framing maps
+    each token to a dedicated frame type so ``unframe`` can return the
+    very same singleton on the far side of a socket."""
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self) -> str:          # pragma: no cover - debugging aid
+        return f"<{self.name}>"
+
+
+# the shutdown token: trails every admitted envelope through the FIFO
+# channels; each consumer counts one copy per upstream member
+_STOP = _Token("STOP")
+# the single-replica drain token: flows through one replica's internal
+# stages like _STOP but exits WITHOUT signaling downstream, so a retired
+# replica never perturbs the next stage's stop accounting
+_RETIRE = _Token("RETIRE")
 
 
 @dataclasses.dataclass
@@ -117,23 +159,51 @@ class BatchEnvelope:
         return sum(e.rows for e in self.extents)
 
 
+# one-shot flag for the pad_trim rank-mismatch warning below (tests reset)
+_RANK_MISMATCH_WARNED = False
+
+
 def slice_parts(flat: dict[str, np.ndarray],
                 extents: list[RowExtent]) -> list[dict[str, np.ndarray]]:
     """Invert batch stacking: one {name: array} view per extent (no copy).
 
     An extent carrying ``pad_trim`` was zero-padded along its middle axes
     to merge into a wider shape bucket; its leaves are trimmed back to the
-    original sizes here (rank-preserving layers only — a leaf whose rank
-    no longer matches the recorded trim is passed through untouched)."""
+    original sizes here.  The trim only applies to rank-preserving layers:
+    a leaf whose rank no longer matches the recorded trim (a rank-changing
+    layer ran after the padded merge) is passed through untouched — and
+    since its padded middle axes can no longer be located, the pass-through
+    may contain padding.  That silent hazard is flagged with a ONE-SHOT
+    ``RuntimeWarning`` (first occurrence per process) pointing at the fix:
+    mark the rank-changing layer ``pad_safe=False`` so its segment falls
+    back to exact bucketing."""
+    global _RANK_MISMATCH_WARNED
     parts = []
     off = 0
     for e in extents:
         part = {k: v[off:off + e.rows] for k, v in flat.items()}
         if e.pad_trim is not None:
             trim = tuple(slice(0, s) for s in e.pad_trim)
-            part = {k: (v[(slice(None),) + trim]
-                        if v.ndim == len(e.pad_trim) + 2 else v)
-                    for k, v in part.items()}
+            trimmed = {}
+            for k, v in part.items():
+                if v.ndim == len(e.pad_trim) + 2:
+                    trimmed[k] = v[(slice(None),) + trim]
+                else:
+                    if not _RANK_MISMATCH_WARNED:
+                        _RANK_MISMATCH_WARNED = True
+                        warnings.warn(
+                            f"slice_parts: leaf {k!r} has rank {v.ndim} but "
+                            f"its pad_trim records {len(e.pad_trim)} middle "
+                            f"axes (rank {len(e.pad_trim) + 2}); a "
+                            "rank-changing layer ran after a padded shape-"
+                            "bucket merge, so the trim cannot be applied "
+                            "and the result may contain padding.  Mark the "
+                            "rank-changing layer pad_safe=False (its "
+                            "segment then uses exact bucketing).  Warning "
+                            "only once per process.",
+                            RuntimeWarning, stacklevel=2)
+                    trimmed[k] = v
+            part = trimmed
         parts.append(part)
         off += e.rows
     return parts
@@ -219,16 +289,32 @@ class WireCodec:
         return blob
 
     def decode_array(self, blob: bytes) -> np.ndarray:
-        if self.compression == "lz4":
-            blob = codecs.Lz4Codec(vectorized=self.vectorized).decompress(blob)
-        if self.serializer == "raw":
-            return np.load(io.BytesIO(blob), allow_pickle=False)
-        if self.serializer == "json":
-            return codecs.JsonCodec().decode(blob)
-        if self.serializer == "q8":
-            return codecs.Q8Codec().decode(blob)
-        return codecs.ZfpCodec(rate=self.zfp_rate,
-                               vectorized=self.vectorized).decode(blob)
+        """Decode one leaf.  The blob is NOT trusted: a truncated or
+        corrupt payload (reachable via a dropped socket mid-frame) raises
+        :class:`WireFormatError` instead of leaking ``struct.error`` /
+        bare ``ValueError`` from the codec internals — the node stages
+        turn that into a per-batch failure, not a dead stage thread."""
+        try:
+            if self.compression == "lz4":
+                blob = codecs.Lz4Codec(
+                    vectorized=self.vectorized).decompress(blob)
+            if self.serializer == "raw":
+                return np.load(io.BytesIO(blob), allow_pickle=False)
+            if self.serializer == "json":
+                return codecs.JsonCodec().decode(blob)
+            if self.serializer == "q8":
+                return codecs.Q8Codec().decode(blob)
+            return codecs.ZfpCodec(rate=self.zfp_rate,
+                                   vectorized=self.vectorized).decode(blob)
+        except WireFormatError:
+            raise
+        except (struct.error, ValueError, EOFError, OSError, IndexError,
+                KeyError, UnicodeDecodeError, AssertionError) as e:
+            # AssertionError: the codecs assert their stream magic/shape
+            # invariants — on an untrusted blob that is corruption too
+            raise WireFormatError(
+                f"corrupt {self.label} array payload "
+                f"({len(blob)} bytes): {e}") from e
 
     # -- structured payloads (pytrees of arrays) -----------------------------
     def encode_tree(self, tree: Any, kind: str,
@@ -254,16 +340,300 @@ class WireCodec:
                                 request_id=request_id, client_id=client_id)
 
     def decode_tree(self, blob: bytes) -> tuple[dict, float]:
+        """Decode a framed pytree stream.  Framing bounds are validated at
+        every read — leaf count vs buffer size, name/body lengths vs the
+        remaining bytes, and exact consumption of the buffer — so a
+        truncated or corrupt blob raises :class:`WireFormatError` rather
+        than returning silently-short garbage or a bare ``struct.error``."""
         t0 = time.perf_counter()
+        end = len(blob)
+        off = _checked(blob, 0, 4, "tree leaf count")
         (n,) = struct.unpack_from("<I", blob, 0)
-        off = 4
+        # each leaf needs at least its 4+8 length headers: a corrupt count
+        # is rejected up front instead of looping until a read trips
+        if n > (end - off) // 12:
+            raise WireFormatError(
+                f"corrupt tree header: {n} leaves cannot fit in "
+                f"{end - off} payload bytes")
         out: dict[str, np.ndarray] = {}
         for _ in range(n):
-            (ln,) = struct.unpack_from("<I", blob, off); off += 4
-            name = blob[off:off + ln].decode(); off += ln
-            (lb,) = struct.unpack_from("<Q", blob, off); off += 8
-            out[name] = self.decode_array(blob[off:off + lb]); off += lb
+            off = _checked(blob, off, 4, "leaf name length")
+            (ln,) = struct.unpack_from("<I", blob, off - 4)
+            off = _checked(blob, off, ln, "leaf name")
+            try:
+                name = blob[off - ln:off].decode()
+            except UnicodeDecodeError as e:
+                raise WireFormatError(f"corrupt leaf name: {e}") from e
+            off = _checked(blob, off, 8, "leaf body length")
+            (lb,) = struct.unpack_from("<Q", blob, off - 8)
+            off = _checked(blob, off, lb, f"leaf {name!r} body")
+            out[name] = self.decode_array(blob[off - lb:off])
+        if off != end:
+            raise WireFormatError(
+                f"corrupt tree: {end - off} trailing bytes after "
+                f"{n} leaves")
         return out, time.perf_counter() - t0
+
+
+def _checked(blob: bytes, off: int, n: int, what: str) -> int:
+    """Validate that ``n`` bytes exist at ``off``; return the new offset.
+    The single bounds gate every framing read goes through."""
+    if n < 0 or off + n > len(blob):
+        raise WireFormatError(
+            f"truncated wire payload: need {n} bytes for {what} at offset "
+            f"{off}, have {len(blob) - off}")
+    return off + n
+
+
+# -- channel-item framing (the byte wire under every transport) ---------------
+#
+#   [2B magic "DW"] [u8 version] [u8 type] [type-specific body]
+#
+# Types: envelope / marker / stop / retire — exactly the items the runtime
+# puts on a Channel.  Every multi-byte integer is little-endian; variable
+# fields are length-prefixed; client ids are JSON with tuples tagged (the
+# runtime hashes client ids, so a tuple must come back a tuple).  No pickle
+# anywhere: a malicious or corrupt peer can at worst raise WireFormatError.
+
+FRAME_MAGIC = b"DW"
+FRAME_VERSION = 1
+
+_F_ENVELOPE = 1
+_F_MARKER = 2
+_F_STOP = 3
+_F_RETIRE = 4
+
+_NONE_U32 = 0xFFFFFFFF
+
+
+def _jsonable(v: Any) -> Any:
+    """Tuple-tagging JSON transform for client ids and knob values."""
+    if isinstance(v, tuple):
+        return {"__tuple__": [_jsonable(x) for x in v]}
+    if isinstance(v, list):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    raise WireFormatError(
+        f"client_id of type {type(v).__name__} is not wire-encodable "
+        "(use int / str / float / tuples thereof)")
+
+
+def _unjsonable(v: Any) -> Any:
+    if isinstance(v, dict):
+        if set(v) == {"__tuple__"}:
+            return tuple(_unjsonable(x) for x in v["__tuple__"])
+        return {k: _unjsonable(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_unjsonable(x) for x in v]
+    return v
+
+
+def _pack_obj(v: Any) -> bytes:
+    return json.dumps(_jsonable(v), separators=(",", ":")).encode()
+
+
+def _unpack_obj(blob: bytes) -> Any:
+    try:
+        return _unjsonable(json.loads(blob.decode()))
+    except (ValueError, UnicodeDecodeError) as e:
+        raise WireFormatError(f"corrupt framed object: {e}") from e
+
+
+def validate_client_id(client_id: Any) -> None:
+    """Raise :class:`WireFormatError` if ``client_id`` cannot cross a
+    byte-framed transport (int / str / float / bool / None / tuples and
+    lists thereof).  The dispatcher calls this at admission so a bad id
+    is a clear submit-time error on ANY topology, never a mid-chain relay
+    failure on the one stage that happens to bind a socket transport."""
+    _pack_obj(client_id)
+
+
+def _pack_bytes(b: bytes) -> bytes:
+    return struct.pack("<I", len(b)) + b
+
+
+def _pack_extent(e: RowExtent) -> bytes:
+    cid = _pack_obj(e.client_id)
+    trim = (struct.pack("<i", -1) if e.pad_trim is None
+            else struct.pack(f"<i{len(e.pad_trim)}q", len(e.pad_trim),
+                             *e.pad_trim))
+    return (struct.pack("<qqqd", e.request_id, e.seq, e.rows, e.t_submit)
+            + _pack_bytes(cid) + trim)
+
+
+def _unpack_extent(blob: bytes, off: int) -> tuple[RowExtent, int]:
+    off = _checked(blob, off, 32, "extent header")
+    rid, seq, rows, t_submit = struct.unpack_from("<qqqd", blob, off - 32)
+    off = _checked(blob, off, 4, "extent client id length")
+    (ln,) = struct.unpack_from("<I", blob, off - 4)
+    off = _checked(blob, off, ln, "extent client id")
+    cid = _unpack_obj(blob[off - ln:off])
+    try:
+        hash(cid)
+    except TypeError as e:
+        raise WireFormatError(f"unhashable client id on the wire: {e}") from e
+    off = _checked(blob, off, 4, "extent pad_trim count")
+    (nt,) = struct.unpack_from("<i", blob, off - 4)
+    trim = None
+    if nt >= 0:
+        off = _checked(blob, off, 8 * nt, "extent pad_trim values")
+        trim = struct.unpack_from(f"<{nt}q", blob, off - 8 * nt)
+    return RowExtent(rid, cid, seq, rows, t_submit=t_submit,
+                     pad_trim=trim), off
+
+
+def _codec_fields(c: "WireCodec") -> bytes:
+    return _pack_obj([c.serializer, c.compression, c.zfp_rate, c.vectorized])
+
+
+def _codec_from_fields(blob: bytes) -> "WireCodec":
+    f = _unpack_obj(blob)
+    if (not isinstance(f, list) or len(f) != 4
+            or not all(isinstance(x, t) for x, t in
+                       zip(f, (str, str, int, bool)))):
+        raise WireFormatError(f"corrupt wire codec descriptor: {f!r}")
+    return WireCodec(serializer=f[0], compression=f[1], zfp_rate=f[2],
+                     vectorized=f[3])
+
+
+def frame(item: Any) -> bytes:
+    """Serialize one channel item to the versioned byte wire (no pickle).
+    Accepts exactly what the runtime puts on channels: a
+    :class:`BatchEnvelope`, a :class:`ReconfigMarker` (with its
+    :class:`NodePlan` payloads), or the ``_STOP``/``_RETIRE`` tokens."""
+    def head(ftype: int) -> bytes:
+        return FRAME_MAGIC + struct.pack("<BB", FRAME_VERSION, ftype)
+
+    if item is _STOP:
+        return head(_F_STOP)
+    if item is _RETIRE:
+        return head(_F_RETIRE)
+    if isinstance(item, BatchEnvelope):
+        err = (struct.pack("<I", _NONE_U32) if item.error is None
+               else _pack_bytes(item.error.encode()))
+        return (head(_F_ENVELOPE) + struct.pack("<q", item.epoch) + err
+                + struct.pack("<I", len(item.extents))
+                + b"".join(_pack_extent(e) for e in item.extents)
+                + struct.pack("<Q", len(item.blob)) + item.blob)
+    if isinstance(item, ReconfigMarker):
+        parts = [head(_F_MARKER), struct.pack("<q", item.epoch),
+                 struct.pack("<I", len(item.plans))]
+        for stage, plan in sorted(item.plans.items()):
+            parts.append(struct.pack("<iqqq", stage, plan.lo, plan.hi,
+                                     plan.wire_bytes))
+            parts.append(_pack_bytes(plan.arch_blob))
+            parts.append(struct.pack("<Q", len(plan.weights_blob)))
+            parts.append(plan.weights_blob)
+            parts.append(_pack_bytes(_codec_fields(plan.weights_codec)))
+        return b"".join(parts)
+    raise WireFormatError(
+        f"{type(item).__name__} is not a channel item (expected "
+        "BatchEnvelope, ReconfigMarker, or a control token)")
+
+
+def _unframe_envelope(blob: bytes, off: int) -> BatchEnvelope:
+    off = _checked(blob, off, 8, "envelope epoch")
+    (epoch,) = struct.unpack_from("<q", blob, off - 8)
+    off = _checked(blob, off, 4, "envelope error length")
+    (el,) = struct.unpack_from("<I", blob, off - 4)
+    error = None
+    if el != _NONE_U32:
+        off = _checked(blob, off, el, "envelope error")
+        try:
+            error = blob[off - el:off].decode()
+        except UnicodeDecodeError as e:
+            raise WireFormatError(f"corrupt envelope error text: {e}") from e
+    off = _checked(blob, off, 4, "envelope extent count")
+    (n,) = struct.unpack_from("<I", blob, off - 4)
+    if n > (len(blob) - off) // 40:      # min extent: 32B header + 2 u32s
+        raise WireFormatError(
+            f"corrupt envelope: {n} extents cannot fit in "
+            f"{len(blob) - off} bytes")
+    extents = []
+    for _ in range(n):
+        e, off = _unpack_extent(blob, off)
+        extents.append(e)
+    off = _checked(blob, off, 8, "envelope blob length")
+    (lb,) = struct.unpack_from("<Q", blob, off - 8)
+    off = _checked(blob, off, lb, "envelope blob")
+    if off != len(blob):
+        raise WireFormatError(
+            f"corrupt envelope: {len(blob) - off} trailing bytes")
+    return BatchEnvelope(extents, blob[off - lb:off], error=error,
+                         epoch=epoch)
+
+
+def _unframe_marker(blob: bytes, off: int) -> ReconfigMarker:
+    off = _checked(blob, off, 8, "marker epoch")
+    (epoch,) = struct.unpack_from("<q", blob, off - 8)
+    off = _checked(blob, off, 4, "marker plan count")
+    (n,) = struct.unpack_from("<I", blob, off - 4)
+    if n > (len(blob) - off) // 28:      # min plan: 28B fixed header
+        raise WireFormatError(
+            f"corrupt marker: {n} plans cannot fit in "
+            f"{len(blob) - off} bytes")
+    plans: dict[int, NodePlan] = {}
+    for _ in range(n):
+        off = _checked(blob, off, 28, "plan header")
+        stage, lo, hi, wire_bytes = struct.unpack_from(
+            "<iqqq", blob, off - 28)
+        off = _checked(blob, off, 4, "plan arch length")
+        (la,) = struct.unpack_from("<I", blob, off - 4)
+        off = _checked(blob, off, la, "plan arch blob")
+        arch = blob[off - la:off]
+        off = _checked(blob, off, 8, "plan weights length")
+        (lw,) = struct.unpack_from("<Q", blob, off - 8)
+        off = _checked(blob, off, lw, "plan weights blob")
+        weights = blob[off - lw:off]
+        off = _checked(blob, off, 4, "plan codec length")
+        (lc,) = struct.unpack_from("<I", blob, off - 4)
+        off = _checked(blob, off, lc, "plan codec descriptor")
+        codec = _codec_from_fields(blob[off - lc:off])
+        plans[stage] = NodePlan(lo, hi, arch, weights, codec,
+                                wire_bytes=wire_bytes)
+    if off != len(blob):
+        raise WireFormatError(
+            f"corrupt marker: {len(blob) - off} trailing bytes")
+    return ReconfigMarker(epoch, plans)
+
+
+def unframe(blob: bytes) -> Any:
+    """Parse one framed channel item.  Every read is bounds-checked; any
+    malformation — short buffer, bad magic, unknown version or type,
+    lengths past the end, trailing bytes — raises
+    :class:`WireFormatError`.  Control tokens come back as the SAME
+    singletons the in-process runtime identity-compares against."""
+    try:
+        if len(blob) < 4:
+            raise WireFormatError(
+                f"truncated frame: {len(blob)} bytes, need >= 4")
+        if blob[:2] != FRAME_MAGIC:
+            raise WireFormatError(f"bad frame magic {blob[:2]!r}")
+        version, ftype = struct.unpack_from("<BB", blob, 2)
+        if version != FRAME_VERSION:
+            raise WireFormatError(
+                f"unsupported frame version {version} "
+                f"(speaking {FRAME_VERSION})")
+        if ftype == _F_STOP:
+            return _STOP
+        if ftype == _F_RETIRE:
+            return _RETIRE
+        if ftype == _F_ENVELOPE:
+            return _unframe_envelope(blob, 4)
+        if ftype == _F_MARKER:
+            return _unframe_marker(blob, 4)
+        raise WireFormatError(f"unknown frame type {ftype}")
+    except WireFormatError:
+        raise
+    except Exception as e:      # any residual parse error is a wire fault
+        raise WireFormatError(f"corrupt frame: {e}") from e
 
 
 def tree_unflatten_paths(flat: dict[str, np.ndarray]) -> dict:
