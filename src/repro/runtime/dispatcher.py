@@ -38,7 +38,7 @@ import threading
 import time
 import traceback
 from collections import defaultdict, deque
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Any, Iterable, Sequence
 
 import numpy as np
@@ -348,7 +348,7 @@ class Dispatcher:
             if env is _STOP:
                 try:
                     head.send(_STOP)
-                except Exception:
+                except (ChannelClosed, OSError):
                     pass                # head link dead: nothing to stop
                 return
             try:
@@ -499,7 +499,7 @@ class Dispatcher:
         for fut in failed:
             try:
                 fut.set_exception(NodeError(reason))
-            except Exception:
+            except InvalidStateError:
                 pass                    # already resolved: nothing owed
 
     def _finish_batch(self, extents: list[RowExtent],
@@ -888,5 +888,5 @@ class Dispatcher:
         for ch in self._channels:
             try:
                 ch.close()
-            except Exception:
+            except Exception:  # deferlint: swallow(best-effort teardown of already-dead channels)
                 pass

@@ -712,9 +712,8 @@ class ComputeNode:
                 self.next_inbox.send(BatchEnvelope(
                     item.extents, b"", error=traceback.format_exc(),
                     epoch=item.epoch))
-            except Exception:
-                pass            # extents themselves unencodable: nothing
-                                # more this hop can signal
+            except Exception:  # deferlint: swallow(error envelope itself unencodable; no further signal possible)
+                pass
 
     def _egress_loop(self) -> None:
         while True:

@@ -167,6 +167,20 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return bytes(buf)
 
 
+def _recv_u32(sock: socket.socket, what: str) -> int:
+    """Read one little-endian u32 header field through the wire bounds
+    gate, so a truncated or malformed peer surfaces as WireFormatError
+    (the per-channel fault the read loops already translate into a clean
+    channel death) instead of a bare struct.error."""
+    try:
+        buf = _recv_exact(sock, 4)
+    except ConnectionError as e:
+        raise _wire.WireFormatError(f"truncated {what}: {e}") from e
+    _wire._checked(buf, 0, 4, what)
+    (v,) = struct.unpack("<I", buf)
+    return v
+
+
 _CLOSED = object()      # reader-thread sentinel: the stream is gone
 
 
@@ -274,7 +288,7 @@ class TcpChannel(Channel):
         sock = self._recv_sock
         try:
             while True:
-                (ln,) = struct.unpack("<I", _recv_exact(sock, 4))
+                ln = _recv_u32(sock, "tcp frame length prefix")
                 self._recv_q.put(_wire.unframe(_recv_exact(sock, ln)))
         except (OSError, ConnectionError, _wire.WireFormatError):
             # EOF, reset, or an unrecoverable framing desync: the stream
@@ -394,8 +408,8 @@ class TcpTransport(Transport):
             try:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
                 # the 4-byte hello names the channel this connection backs
-                (cid,) = struct.unpack("<I", _recv_exact(conn, 4))
-            except (OSError, ConnectionError):
+                cid = _recv_u32(conn, "tcp channel hello")
+            except (OSError, ConnectionError, _wire.WireFormatError):
                 conn.close()
                 continue
             with self._lock:

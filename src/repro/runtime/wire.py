@@ -611,9 +611,7 @@ def unframe(blob: bytes) -> Any:
     :class:`WireFormatError`.  Control tokens come back as the SAME
     singletons the in-process runtime identity-compares against."""
     try:
-        if len(blob) < 4:
-            raise WireFormatError(
-                f"truncated frame: {len(blob)} bytes, need >= 4")
+        _checked(blob, 0, 4, "frame header")
         if blob[:2] != FRAME_MAGIC:
             raise WireFormatError(f"bad frame magic {blob[:2]!r}")
         version, ftype = struct.unpack_from("<BB", blob, 2)

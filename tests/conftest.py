@@ -1,8 +1,54 @@
 import os
 import sys
+import threading
+
+import pytest
 
 # smoke tests and benches must see ONE device (the dry-run sets 512 itself,
 # in a separate process)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+sys.path.insert(0, _REPO_ROOT)
+
+# Runtime lockdep (tools/deferlint/lockdep.py): when DEFERLINT_LOCKDEP=1,
+# threading.Lock/RLock created from repro/runtime files are instrumented
+# and real acquisition order is recorded; inversions (A held while taking
+# B in one place, B held while taking A in another) fail the session.
+# Must install BEFORE any runtime module is imported so module- and
+# __init__-time locks are wrapped too.
+from tools.deferlint import lockdep as _lockdep  # noqa: E402
+
+_LOCKDEP_ON = _lockdep.install_if_enabled()
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lockdep_session_check():
+    yield
+    if _LOCKDEP_ON:
+        inversions = _lockdep.registry().inversions()
+        assert not inversions, (
+            "lockdep observed lock-order inversions during the suite:\n"
+            + "\n".join(inversions)
+        )
+
+
+@pytest.fixture(autouse=True)
+def _no_thread_leaks():
+    """Fail any test that leaves stray non-daemon threads running: a
+    non-daemon leak means some runtime object was not shut down, and the
+    whole interpreter would hang at exit in production."""
+    before = set(threading.enumerate())
+    yield
+    strays = _lockdep.running_nondaemon_threads(before)
+    if strays:
+        # give graceful teardown a moment (collector threads finishing a
+        # final drain) before declaring a leak
+        for t in strays:
+            t.join(timeout=1.0)
+        strays = _lockdep.running_nondaemon_threads(before)
+    assert not strays, (
+        "test leaked non-daemon threads (missing shutdown/join): "
+        + ", ".join(repr(t) for t in strays)
+    )

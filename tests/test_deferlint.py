@@ -1,0 +1,406 @@
+"""deferlint self-tests: one minimal violating snippet per rule plus a
+passing twin, asserting rule id and line number, plus the repo-is-clean
+gate and unit tests for the runtime lockdep registry."""
+
+import os
+import textwrap
+import threading
+
+import pytest
+
+from tools.deferlint import lint_paths, main
+from tools.deferlint.lockdep import Registry, running_nondaemon_threads
+
+
+def _lint_snippet(tmp_path, source, reldir="runtime"):
+    """Write `source` as a module under a fake package tree (pkg/<reldir>/)
+    and lint it, returning the violations."""
+    d = tmp_path / "pkg" / reldir
+    d.mkdir(parents=True, exist_ok=True)
+    mod = d / "mod.py"
+    mod.write_text(textwrap.dedent(source))
+    return lint_paths([str(tmp_path / "pkg")])
+
+
+def _rules_at(violations):
+    return [(v.rule, v.line) for v in violations]
+
+
+# -- DL101: unchecked struct.unpack -------------------------------------------
+
+def test_dl101_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import struct
+
+        def parse(blob):
+            (n,) = struct.unpack_from("<I", blob, 0)
+            return n
+        """)
+    assert ("DL101", 4) in _rules_at(vs)
+
+
+def test_dl101_passing_twin(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import struct
+
+        def _checked(blob, off, n, what):
+            return off + n
+
+        def parse(blob):
+            _checked(blob, 0, 4, "count")
+            (n,) = struct.unpack_from("<I", blob, 0)
+            return n
+        """)
+    assert not [v for v in vs if v.rule == "DL101"]
+
+
+# -- DL102: pickle/eval banned in runtime/ ------------------------------------
+
+def test_dl102_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import pickle
+
+        def load(blob):
+            return pickle.loads(blob)
+        """)
+    assert ("DL102", 1) in _rules_at(vs)
+
+
+def test_dl102_eval_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def run(expr):
+            return eval(expr)
+        """)
+    assert ("DL102", 2) in _rules_at(vs)
+
+
+def test_dl102_passing_outside_runtime(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import pickle
+        """, reldir="offline")
+    assert not [v for v in vs if v.rule == "DL102"]
+
+
+# -- DL201: lock-order cycle --------------------------------------------------
+
+def test_dl201_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import threading
+
+        class Node:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def forward(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def backward(self):
+                with self._b:
+                    with self._a:
+                        pass
+        """)
+    dl201 = [v for v in vs if v.rule == "DL201"]
+    # anchored at whichever inner `with` completed the cycle edge
+    assert dl201 and dl201[0].line in (10, 15)
+
+
+def test_dl201_passing_twin(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import threading
+
+        class Node:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def forward(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def backward(self):
+                with self._a:
+                    with self._b:
+                        pass
+        """)
+    assert not [v for v in vs if v.rule == "DL201"]
+
+
+def test_dl201_cross_method_cycle(tmp_path):
+    # a cycle only visible through a held call into another method
+    vs = _lint_snippet(tmp_path, """\
+        import threading
+
+        class Node:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def report_stats(self):
+                with self._b:
+                    pass
+
+            def forward(self):
+                with self._a:
+                    self.report_stats()
+
+            def backward(self):
+                with self._b:
+                    with self._a:
+                        pass
+        """)
+    assert [v for v in vs if v.rule == "DL201"]
+
+
+# -- DL301: non-daemon unjoined thread ----------------------------------------
+
+def test_dl301_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import threading
+
+        class Worker:
+            def start(self):
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+        """)
+    assert ("DL301", 5) in _rules_at(vs)
+
+
+def test_dl301_passing_daemon(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import threading
+
+        class Worker:
+            def start(self):
+                self._t = threading.Thread(target=self._run, daemon=True)
+                self._t.start()
+        """)
+    assert not [v for v in vs if v.rule == "DL301"]
+
+
+def test_dl301_passing_joined(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import threading
+
+        class Worker:
+            def start(self):
+                self._t = threading.Thread(target=self._run)
+                self._t.start()
+
+            def stop(self):
+                self._t.join(5.0)
+        """)
+    assert not [v for v in vs if v.rule == "DL301"]
+
+
+# -- DL302: unkillable blocking loop / unbounded join -------------------------
+
+def test_dl302_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def pump(q):
+            while True:
+                item = q.get()
+                handle(item)
+        """)
+    assert ("DL302", 3) in _rules_at(vs)
+
+
+def test_dl302_passing_stop_token(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        _STOP = object()
+
+        def pump(q):
+            while True:
+                item = q.get()
+                if item is _STOP:
+                    return
+                handle(item)
+        """)
+    assert not [v for v in vs if v.rule == "DL302"]
+
+
+def test_dl302_unbounded_join_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def wait_for(t):
+            t.join()
+        """)
+    assert ("DL302", 2) in _rules_at(vs)
+
+
+def test_dl302_join_in_shutdown_passes(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        class Worker:
+            def stop(self):
+                self._t.join()
+        """)
+    assert not [v for v in vs if v.rule == "DL302"]
+
+
+# -- DL303: time.sleep outside the shaper -------------------------------------
+
+def test_dl303_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import time
+
+        def poll(x):
+            time.sleep(0.1)
+        """)
+    assert ("DL303", 4) in _rules_at(vs)
+
+
+def test_dl303_passing_in_shaper(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import time
+
+        class LinkChannel:
+            def _xmit_loop(self):
+                time.sleep(0.001)
+        """)
+    assert not [v for v in vs if v.rule == "DL303"]
+
+
+# -- DL401: unaudited broad except --------------------------------------------
+
+def test_dl401_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def relay(ch, item):
+            try:
+                ch.send(item)
+            except Exception:
+                pass
+        """)
+    assert ("DL401", 4) in _rules_at(vs)
+
+
+def test_dl401_passing_swallow_tag(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def relay(ch, item):
+            try:
+                ch.send(item)
+            except Exception:  # deferlint: swallow(best-effort notify)
+                pass
+        """)
+    assert not [v for v in vs if v.rule == "DL401"]
+
+
+def test_dl401_passing_reraise(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def relay(ch, item):
+            try:
+                ch.send(item)
+            except Exception as e:
+                raise RuntimeError("send failed") from e
+        """)
+    assert not [v for v in vs if v.rule == "DL401"]
+
+
+# -- DL501: token compared by equality ----------------------------------------
+
+def test_dl501_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        _STOP = object()
+
+        def pump(q):
+            while True:
+                item = q.get()
+                if item == _STOP:
+                    return
+        """)
+    assert ("DL501", 6) in _rules_at(vs)
+
+
+def test_dl501_passing_twin(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        _STOP = object()
+
+        def pump(q):
+            while True:
+                item = q.get()
+                if item is _STOP:
+                    return
+        """)
+    assert not [v for v in vs if v.rule == "DL501"]
+
+
+def test_dl501_int_tag_untouched(tmp_path):
+    # integer wire tags like _F_STOP legitimately use ==
+    vs = _lint_snippet(tmp_path, """\
+        _F_STOP = 2
+
+        def classify(ftype):
+            return ftype == _F_STOP
+        """)
+    assert not [v for v in vs if v.rule == "DL501"]
+
+
+# -- the repo itself is clean, and the CLI exit codes are right ---------------
+
+def test_repo_is_clean():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    violations = lint_paths([src])
+    assert not violations, "\n".join(v.format() for v in violations)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "runtime"
+    bad.mkdir()
+    (bad / "m.py").write_text("import struct\n(n,) = struct.unpack('<I', b)\n")
+    assert main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "DL101" in out
+    good = tmp_path / "clean"
+    good.mkdir()
+    (good / "m.py").write_text("x = 1\n")
+    assert main([str(good)]) == 0
+
+
+# -- runtime lockdep unit tests -----------------------------------------------
+
+def test_lockdep_detects_inversion():
+    reg = Registry()
+
+    def t1():
+        reg.note_acquire("A", "t1")
+        reg.note_acquire("B", "t1")
+        reg.note_release("B")
+        reg.note_release("A")
+
+    def t2():
+        reg.note_acquire("B", "t2")
+        reg.note_acquire("A", "t2")
+        reg.note_release("A")
+        reg.note_release("B")
+
+    # run in real threads so the per-thread held stacks are distinct
+    for fn in (t1, t2):
+        t = threading.Thread(target=fn)
+        t.start()
+        t.join()
+    inv = reg.inversions()
+    assert inv and "A" in inv[0] and "B" in inv[0]
+
+
+def test_lockdep_consistent_order_is_clean():
+    reg = Registry()
+    for _ in range(2):
+        reg.note_acquire("A", "x")
+        reg.note_acquire("B", "x")
+        reg.note_release("B")
+        reg.note_release("A")
+    assert reg.inversions() == []
+
+
+def test_thread_leak_helper():
+    evt = threading.Event()
+    before = set(threading.enumerate())
+    t = threading.Thread(target=evt.wait)
+    t.start()
+    try:
+        assert t in running_nondaemon_threads(before)
+    finally:
+        evt.set()
+        t.join()
+    assert t not in running_nondaemon_threads(before)

@@ -1,0 +1,8 @@
+"""deferlint — repo-specific static analysis + runtime concurrency harnesses.
+
+Run: ``python -m tools.deferlint src``
+"""
+
+from tools.deferlint.core import (  # noqa: F401
+    RULE_CATALOG, ModuleInfo, Violation, lint_paths, main,
+)

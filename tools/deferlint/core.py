@@ -1,0 +1,177 @@
+"""deferlint core: module loading, checker registry, reporting.
+
+deferlint is a purpose-built static analyzer for this repo's runtime.  It
+does not try to be a general linter: every rule encodes one invariant the
+distributed runtime actually depends on (bounds-checked wire reads,
+identity-compared stop tokens, acyclic lock order, auditable exception
+swallowing, joinable threads).  Rules are small AST passes registered via
+``@checker``; ``lint_paths`` walks the target tree once, parses each module,
+and hands the parsed ``ModuleInfo`` set to every checker.
+
+Suppression mechanisms (use sparingly, the bar is "a reviewer agreed the
+invariant genuinely does not apply here"):
+
+* ``# deferlint: swallow(<reason>)`` on the ``except`` line — DL401 only.
+* An ``ALLOWLIST`` entry keyed by (path suffix, qualname) — DL101 only,
+  reserved for codec internals whose callers already wrap decode errors.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str          # e.g. "DL101"
+    path: str          # repo-relative path
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclass
+class ModuleInfo:
+    path: str                 # absolute path
+    relpath: str              # path relative to the lint root's parent (posix)
+    tree: ast.Module
+    source_lines: List[str] = field(default_factory=list)
+
+    @property
+    def in_runtime(self) -> bool:
+        return "/runtime/" in "/" + self.relpath.replace(os.sep, "/")
+
+    def line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.source_lines):
+            return self.source_lines[lineno - 1]
+        return ""
+
+
+CheckerFn = Callable[[List[ModuleInfo]], Iterable[Violation]]
+_CHECKERS: List[Tuple[str, CheckerFn]] = []
+
+
+def checker(name: str) -> Callable[[CheckerFn], CheckerFn]:
+    def wrap(fn: CheckerFn) -> CheckerFn:
+        _CHECKERS.append((name, fn))
+        return fn
+    return wrap
+
+
+def iter_functions(tree: ast.AST):
+    """Yield (qualname, funcdef) for every function/method, including
+    nested closures (qualified as ``outer.<locals>.inner``)."""
+
+    def visit(node: ast.AST, prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{child.name}"
+                yield qn, child
+                yield from visit(child, f"{qn}.<locals>.")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+
+    yield from visit(tree, "")
+
+
+def enclosing_function_map(tree: ast.AST) -> Dict[ast.AST, Tuple[str, ast.AST]]:
+    """Map every AST node to its innermost enclosing (qualname, funcdef)."""
+    out: Dict[ast.AST, Tuple[str, ast.AST]] = {}
+    for qn, fn in iter_functions(tree):
+        for node in ast.walk(fn):
+            if node is fn:
+                continue
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            # innermost wins: iter_functions yields outer before inner, so
+            # later (inner) assignments overwrite earlier (outer) ones.
+            out[node] = (qn, fn)
+    # nodes inside nested functions got overwritten correctly because inner
+    # functions are yielded after their enclosing function and re-walk the
+    # same subtree.
+    return out
+
+
+def load_module(path: str, root_parent: str) -> Optional[ModuleInfo]:
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            src = f.read()
+        tree = ast.parse(src, filename=path)
+    except (OSError, SyntaxError) as e:
+        print(f"deferlint: cannot parse {path}: {e}", file=sys.stderr)
+        return None
+    rel = os.path.relpath(path, root_parent).replace(os.sep, "/")
+    return ModuleInfo(path=path, relpath=rel, tree=tree,
+                      source_lines=src.splitlines())
+
+
+def collect_modules(paths: Sequence[str]) -> List[ModuleInfo]:
+    mods: List[ModuleInfo] = []
+    for p in paths:
+        p = os.path.abspath(p)
+        if os.path.isfile(p):
+            mi = load_module(p, os.path.dirname(p))
+            if mi:
+                mods.append(mi)
+            continue
+        root_parent = os.path.dirname(p.rstrip(os.sep))
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    mi = load_module(os.path.join(dirpath, fn), root_parent)
+                    if mi:
+                        mods.append(mi)
+    return mods
+
+
+def lint_paths(paths: Sequence[str]) -> List[Violation]:
+    mods = collect_modules(paths)
+    # checker modules register themselves on import
+    from tools.deferlint import (  # noqa: F401
+        hygiene, locks, threads, tokens, wire_safety,
+    )
+    out: List[Violation] = []
+    for _name, fn in _CHECKERS:
+        out.extend(fn(mods))
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out
+
+
+RULE_CATALOG = {
+    "DL101": "struct.unpack/unpack_from not behind wire._checked (allowlist: core/codecs.py internals only)",
+    "DL102": "pickle/marshal import or eval/exec call inside runtime/",
+    "DL201": "cycle in the static lock-acquisition graph across runtime/",
+    "DL301": "threading.Thread neither daemon=True nor joined in a shutdown path",
+    "DL302": "blocking get()/recv() loop with no stop-token path, or unbounded join outside shutdown",
+    "DL303": "time.sleep outside the LinkChannel rate shaper",
+    "DL401": "except Exception that neither re-raises, resolves a future/error envelope, nor carries a swallow tag",
+    "DL501": "stop/fence singleton compared with ==/!= instead of is/is not",
+}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help"):
+        print("usage: python -m tools.deferlint <path> [<path> ...]")
+        print("\nrules:")
+        for rid, desc in sorted(RULE_CATALOG.items()):
+            print(f"  {rid}  {desc}")
+        return 0 if argv else 2
+    violations = lint_paths(argv)
+    for v in violations:
+        print(v.format())
+    if violations:
+        print(f"deferlint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("deferlint: clean")
+    return 0

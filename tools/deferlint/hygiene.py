@@ -1,0 +1,88 @@
+"""DL401 — exception hygiene in runtime/.
+
+Every ``except Exception:`` (or broader: bare ``except:`` /
+``except BaseException:``) must do one of:
+
+* re-raise (``raise`` appears in the handler),
+* resolve the failure into the runtime's error plumbing — call one of the
+  known resolver functions (future completion, error-envelope
+  construction, pending-failure fan-out), or reference
+  ``traceback.format_exc`` (the error-envelope convention), or
+* carry an explicit ``# deferlint: swallow(<reason>)`` tag on the
+  ``except`` line.
+
+The point is not to forbid swallowing — the runtime legitimately swallows
+in best-effort teardown paths — but to make every swallow a reviewed,
+greppable decision instead of an accident that turns a ``WireFormatError``
+into a silent hang.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List
+
+from tools.deferlint.core import (
+    ModuleInfo, Violation, checker, enclosing_function_map,
+)
+
+SWALLOW_RE = re.compile(r"#\s*deferlint:\s*swallow\(([^)]+)\)")
+
+# Calls that count as "resolved the failure into the error plumbing".
+RESOLVERS = {
+    "set_exception", "fail", "fail_extents", "fail_stranded",
+    "on_member_death", "_fail_all_pending", "_finish_batch", "_unregister",
+    "format_exc", "record_error",
+}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    names = set()
+    for n in ast.walk(t):
+        if isinstance(n, ast.Name):
+            names.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            names.add(n.attr)
+    return bool(names.intersection({"Exception", "BaseException"}))
+
+
+def _handler_ok(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Call):
+            f = node.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else None)
+            if name in RESOLVERS:
+                return True
+        if isinstance(node, ast.Attribute) and node.attr == "format_exc":
+            return True
+    return False
+
+
+@checker("exception-hygiene")
+def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    for mi in mods:
+        if not mi.in_runtime:
+            continue
+        encl = enclosing_function_map(mi.tree)
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.ExceptHandler) or not _is_broad(node):
+                continue
+            if _handler_ok(node):
+                continue
+            if SWALLOW_RE.search(mi.line(node.lineno)):
+                continue
+            where = encl.get(node)
+            qn = where[0] if where else "<module>"
+            yield Violation(
+                "DL401", mi.relpath, node.lineno,
+                f"broad except in {qn} neither re-raises, resolves a "
+                "future/error envelope, nor carries a "
+                "'# deferlint: swallow(<reason>)' tag",
+            )

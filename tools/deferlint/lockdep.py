@@ -1,0 +1,218 @@
+"""Runtime lockdep: observe real lock-acquisition order during tests.
+
+The static DL201 pass reasons about ``with self._lock:`` nesting it can
+see; this shim catches what it can't — orders established through
+callbacks, closures, and cross-module call chains.  Modeled on the Linux
+kernel's lockdep: locks are grouped into *classes* keyed by their
+creation site (file:line), and every observed "class A held while
+acquiring class B" pair becomes an edge in a global order graph.  If both
+A→B and B→A are ever observed — even on different threads, even minutes
+apart — that's a latent deadlock, reported at session teardown.
+
+Enable with ``DEFERLINT_LOCKDEP=1`` before importing the runtime (the
+test conftest does this).  Only locks created from files under
+``repro/runtime`` are instrumented; stdlib-internal locks (Condition's
+private RLock, Thread._tstate_lock, ...) pass through untouched.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+
+ENV_FLAG = "DEFERLINT_LOCKDEP"
+
+
+def _creation_site() -> Optional[Tuple[str, int]]:
+    """First frame outside threading.py / this module — the real creator."""
+    f = sys._getframe(2)
+    skip = (os.sep + "threading.py", "lockdep.py")
+    while f is not None:
+        fn = f.f_code.co_filename
+        if not fn.endswith(skip[0]) and not fn.endswith(skip[1]):
+            return (fn, f.f_lineno)
+        f = f.f_back
+    return None
+
+
+def _is_runtime_site(site: Optional[Tuple[str, int]]) -> bool:
+    if site is None:
+        return False
+    path = site[0].replace(os.sep, "/")
+    return "repro/runtime/" in path
+
+
+class Registry:
+    """Order graph over lock classes, plus per-thread held stacks."""
+
+    def __init__(self) -> None:
+        self._meta = _REAL_LOCK()
+        self._edges: Dict[Tuple[str, str], Tuple[str, str]] = {}
+        self._inversions: List[str] = []
+        self._tls = threading.local()
+
+    def _held(self) -> List[str]:
+        h = getattr(self._tls, "held", None)
+        if h is None:
+            h = self._tls.held = []
+        return h
+
+    def note_acquire(self, cls: str, where: str) -> None:
+        held = self._held()
+        if held:
+            with self._meta:
+                for h in held:
+                    if h == cls:
+                        continue
+                    fwd = (h, cls)
+                    rev = (cls, h)
+                    if rev in self._edges and fwd not in self._edges:
+                        first = self._edges[rev]
+                        self._inversions.append(
+                            f"lock inversion: {h} -> {cls} at {where} "
+                            f"conflicts with {cls} -> {h} first seen at "
+                            f"{first[1]}"
+                        )
+                    self._edges.setdefault(fwd, (h, where))
+        held.append(cls)
+
+    def note_release(self, cls: str) -> None:
+        held = self._held()
+        # release order need not be LIFO (rare but legal); remove last match
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == cls:
+                del held[i]
+                return
+
+    def inversions(self) -> List[str]:
+        with self._meta:
+            return list(self._inversions)
+
+    def reset(self) -> None:
+        with self._meta:
+            self._edges.clear()
+            self._inversions.clear()
+
+
+_registry = Registry()
+
+
+def registry() -> Registry:
+    return _registry
+
+
+class _InstrumentedLock:
+    """Wraps a real lock, reporting acquire/release order to a Registry.
+
+    Implements the private Condition protocol (_release_save /
+    _acquire_restore / _is_owned) by delegating, so instrumented locks can
+    back ``threading.Condition`` transparently.
+    """
+
+    def __init__(self, inner, cls: str, reg: Registry):
+        self._inner = inner
+        self._cls = cls
+        self._reg = reg
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            where = self._caller()
+            self._reg.note_acquire(self._cls, where)
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._reg.note_release(self._cls)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    # Condition protocol -------------------------------------------------
+    def _release_save(self):
+        self._reg.note_release(self._cls)
+        return self._inner._release_save() if hasattr(
+            self._inner, "_release_save") else (self._inner.release() or None)
+
+    def _acquire_restore(self, state) -> None:
+        if hasattr(self._inner, "_acquire_restore"):
+            self._inner._acquire_restore(state)
+        else:
+            self._inner.acquire()
+        self._reg.note_acquire(self._cls, "<cond-reacquire>")
+
+    def _is_owned(self) -> bool:
+        if hasattr(self._inner, "_is_owned"):
+            return self._inner._is_owned()
+        if self._inner.acquire(False):
+            self._inner.release()
+            return False
+        return True
+
+    @staticmethod
+    def _caller() -> str:
+        f = sys._getframe(2)
+        while f is not None and (
+                f.f_code.co_filename.endswith("lockdep.py")
+                or f.f_code.co_filename.endswith(os.sep + "threading.py")):
+            f = f.f_back
+        if f is None:
+            return "<unknown>"
+        return f"{f.f_code.co_filename}:{f.f_lineno}"
+
+
+def _make_factory(real_ctor, kind: str, reg: Registry):
+    def factory():
+        inner = real_ctor()
+        site = _creation_site()
+        if not _is_runtime_site(site):
+            return inner
+        path = site[0].replace(os.sep, "/")
+        short = "/".join(path.split("/")[-2:])
+        cls = f"{kind}@{short}:{site[1]}"
+        return _InstrumentedLock(inner, cls, reg)
+    return factory
+
+
+_installed = False
+
+
+def install(reg: Optional[Registry] = None) -> None:
+    """Monkeypatch threading.Lock/RLock with instrumented factories."""
+    global _installed
+    if _installed:
+        return
+    reg = reg or _registry
+    threading.Lock = _make_factory(_REAL_LOCK, "Lock", reg)
+    threading.RLock = _make_factory(_REAL_RLOCK, "RLock", reg)
+    _installed = True
+
+
+def install_if_enabled() -> bool:
+    if os.environ.get(ENV_FLAG) == "1":
+        install()
+        return True
+    return False
+
+
+def running_nondaemon_threads(before: Set[threading.Thread]) -> List[threading.Thread]:
+    """Threads alive now that are non-daemon, not main, and not in `before`."""
+    out = []
+    for t in threading.enumerate():
+        if t in before or t.daemon or t is threading.main_thread():
+            continue
+        if t.is_alive():
+            out.append(t)
+    return out

@@ -1,0 +1,248 @@
+"""DL201 — static lock-order analysis over runtime/.
+
+Builds a lock-acquisition graph and fails on cycles.  Lock identities are
+``(ClassName, attr)`` pairs discovered from ``self.X = threading.Lock() /
+RLock() / Condition(...)`` assignments; ``Condition(self._lock)`` aliases
+canonicalize to the underlying lock so ``with self._idle:`` and ``with
+self._lock:`` are the same node.
+
+Edges come from two sources:
+
+1. ``with A: ... with B:`` nesting inside one function → edge A→B.
+2. While A is held, a call to a method known (by name, within the linted
+   file set) to acquire B → edge A→B, computed to a fixpoint over the
+   "eventually acquires" relation so indirect chains are caught.
+
+Name resolution is deliberately coarse — a call ``self.foo()`` or
+``obj.foo()`` matches every method named ``foo`` in the linted set.  That
+over-approximates edges, which is the right failure mode for a deadlock
+lint: false cycles show up loudly at lint time and get refactored or
+renamed, silent real cycles never ship.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.deferlint.core import ModuleInfo, Violation, checker, iter_functions
+
+LOCK_CTORS = ("Lock", "RLock")
+LockId = Tuple[str, str]  # (class qualname, attribute name)
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _ctor_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+class _ClassLocks:
+    """Lock attributes of one class: real locks plus Condition aliases."""
+
+    def __init__(self, cls: str):
+        self.cls = cls
+        self.locks: Set[str] = set()
+        self.alias: Dict[str, str] = {}   # cond attr -> underlying lock attr
+
+    def canon(self, attr: str) -> Optional[str]:
+        if attr in self.locks:
+            return attr
+        return self.alias.get(attr)
+
+
+def _discover_locks(mods: List[ModuleInfo]) -> Dict[str, _ClassLocks]:
+    classes: Dict[str, _ClassLocks] = {}
+    for mi in mods:
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            cl = classes.setdefault(node.name, _ClassLocks(node.name))
+            for sub in ast.walk(node):
+                if not (isinstance(sub, ast.Assign) and len(sub.targets) == 1):
+                    continue
+                attr = _self_attr(sub.targets[0])
+                if attr is None or not isinstance(sub.value, ast.Call):
+                    continue
+                ctor = _ctor_name(sub.value)
+                if ctor in LOCK_CTORS:
+                    cl.locks.add(attr)
+                elif ctor == "Condition":
+                    if sub.value.args:
+                        inner = _self_attr(sub.value.args[0])
+                        if inner is not None:
+                            cl.alias[attr] = inner
+                            continue
+                    # Condition() owns a private RLock: a lock in its own right
+                    cl.locks.add(attr)
+    return classes
+
+
+def _method_class(fn_qualname: str) -> Optional[str]:
+    # "Cls.method" or "Cls.method.<locals>.closure" -> "Cls"
+    parts = fn_qualname.split(".")
+    return parts[0] if len(parts) >= 2 else None
+
+
+@checker("lock-discipline")
+def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    rt = [m for m in mods if m.in_runtime]
+    if not rt:
+        return
+    classes = _discover_locks(rt)
+
+    # per-function: locks acquired directly, ordered edges from nesting,
+    # and (held-lock, callee-name) pairs for the fixpoint.
+    acquires: Dict[str, Set[LockId]] = {}
+    edges: Set[Tuple[LockId, LockId]] = set()
+    edge_site: Dict[Tuple[LockId, LockId], Tuple[str, int]] = {}
+    held_calls: Dict[str, Set[Tuple[LockId, str, Tuple[str, int]]]] = {}
+    methods_by_name: Dict[str, Set[str]] = {}
+
+    for mi in rt:
+        for qn, fn in iter_functions(mi.tree):
+            cls = _method_class(qn)
+            name = qn.split(".<locals>.")[-1].split(".")[-1]
+            methods_by_name.setdefault(name, set()).add(qn)
+            acquires.setdefault(qn, set())
+            held_calls.setdefault(qn, set())
+            _walk_fn(mi, qn, fn, cls, classes, acquires, edges, edge_site,
+                     held_calls)
+
+    # closures acquire on behalf of their enclosing method under the same
+    # class; callee-name resolution: any method with that bare name.
+    eventually: Dict[str, Set[LockId]] = {
+        qn: set(a) for qn, a in acquires.items()
+    }
+    changed = True
+    while changed:
+        changed = False
+        for qn, calls in held_calls.items():
+            for _held, callee, _site in calls:
+                for target in methods_by_name.get(callee, ()):
+                    extra = eventually.get(target, set()) - eventually[qn]
+                    if extra:
+                        eventually[qn] |= extra
+                        changed = True
+        # also propagate plain (unheld) calls?  No: only held calls create
+        # ordering edges; "eventually" only needs to cover what a callee
+        # acquires so a held call can expand into edges below.
+
+    for qn, calls in held_calls.items():
+        for held, callee, site in calls:
+            for target in methods_by_name.get(callee, ()):
+                for acquired in eventually.get(target, ()):
+                    if acquired != held:
+                        e = (held, acquired)
+                        if e not in edges:
+                            edges.add(e)
+                            edge_site[e] = site
+
+    cycle = _find_cycle(edges)
+    if cycle:
+        desc = " -> ".join(f"{c}.{a}" for c, a in cycle)
+        first = edge_site.get((cycle[0], cycle[1]),
+                              (rt[0].relpath, 1)) if len(cycle) > 1 else (rt[0].relpath, 1)
+        yield Violation(
+            "DL201", first[0], first[1],
+            f"lock-order cycle: {desc} (threads taking these locks in "
+            "different orders can deadlock; break the cycle or refactor "
+            "one side to drop the outer lock first)",
+        )
+
+
+def _walk_fn(mi, qn, fn, cls, classes, acquires, edges, edge_site, held_calls):
+    """Single pass over one function body tracking the stack of held locks."""
+
+    def resolve(expr: ast.AST) -> Optional[LockId]:
+        attr = _self_attr(expr)
+        if attr is None or cls is None:
+            return None
+        cl = classes.get(cls)
+        if cl is None:
+            return None
+        canon = cl.canon(attr)
+        return (cls, canon) if canon is not None else None
+
+    def visit(node: ast.AST, held: Tuple[LockId, ...]):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # nested defs handled as their own functions
+        if isinstance(node, ast.With):
+            new_held = held
+            for item in node.items:
+                lock = resolve(item.context_expr)
+                if lock is not None:
+                    acquires[qn].add(lock)
+                    for h in new_held:
+                        if h != lock:
+                            e = (h, lock)
+                            if e not in edges:
+                                edges.add(e)
+                                edge_site[e] = (mi.relpath, node.lineno)
+                    new_held = new_held + (lock,)
+            for child in node.body:
+                visit(child, new_held)
+            return
+        if isinstance(node, ast.Call) and held:
+            f = node.func
+            callee = None
+            if isinstance(f, ast.Attribute):
+                callee = f.attr
+            elif isinstance(f, ast.Name):
+                callee = f.id
+            if callee and callee not in ("append", "pop", "get", "put",
+                                         "add", "discard", "len", "items",
+                                         "values", "keys", "notify",
+                                         "notify_all", "wait", "format",
+                                         "join", "set", "clear", "update",
+                                         "copy", "extend", "remove"):
+                for h in held:
+                    held_calls[qn].add((h, callee, (mi.relpath, node.lineno)))
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in fn.body:
+        visit(stmt, ())
+
+
+def _find_cycle(edges: Set[Tuple[LockId, LockId]]) -> Optional[List[LockId]]:
+    graph: Dict[LockId, Set[LockId]] = {}
+    for a, b in edges:
+        graph.setdefault(a, set()).add(b)
+        graph.setdefault(b, set())
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    stack: List[LockId] = []
+
+    def dfs(n: LockId) -> Optional[List[LockId]]:
+        color[n] = GREY
+        stack.append(n)
+        for m in sorted(graph[n]):
+            if color[m] == GREY:
+                i = stack.index(m)
+                return stack[i:] + [m]
+            if color[m] == WHITE:
+                got = dfs(m)
+                if got:
+                    return got
+        stack.pop()
+        color[n] = BLACK
+        return None
+
+    for n in sorted(graph):
+        if color[n] == WHITE:
+            got = dfs(n)
+            if got:
+                return got
+    return None

@@ -1,0 +1,201 @@
+"""DL301/DL302/DL303 — thread discipline in runtime/.
+
+DL301: every ``threading.Thread(...)`` must either pass ``daemon=True`` at
+construction (or set ``.daemon = True`` before ``.start()`` in the same
+function) or be joined somewhere in the linted set — otherwise shutdown
+can hang forever on a forgotten worker.
+
+DL302: a ``while True:`` loop whose body blocks on a bare ``.get()`` /
+``.recv()`` must have a stop path: the loop (or its enclosing function)
+must reference one of the stop/close singletons (``_STOP``, ``_RETIRE``,
+``_CLOSED``) or handle ``ChannelClosed`` — the runtime's convention for
+"this loop is told to die, it doesn't need to be killed".  Unbounded
+``.join()`` calls are only allowed inside shutdown-path functions
+(``stop``/``join``/``shutdown``/``drain``/``close``/``scale``/``retire``)
+or with an explicit timeout.
+
+DL303: ``time.sleep`` anywhere except ``LinkChannel`` (the emulated-link
+rate shaper, the one place wall-clock pacing is the point) — everywhere
+else, sleeping is a latent flake or a poll loop that should be a
+condition wait.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from tools.deferlint.core import ModuleInfo, Violation, checker, iter_functions
+
+STOP_TOKENS = ("_STOP", "_RETIRE", "_CLOSED")
+SHUTDOWN_FN_NAMES = ("stop", "join", "shutdown", "drain", "close", "scale",
+                     "retire", "__exit__", "broadcast")
+
+
+def _enclosing_class(qn: str) -> Optional[str]:
+    parts = qn.split(".")
+    return parts[0] if len(parts) >= 2 else None
+
+
+@checker("thread-discipline")
+def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    rt = [m for m in mods if m.in_runtime]
+    if not rt:
+        return
+
+    # global view: which thread-target names are ever joined?
+    joined_attrs: Set[str] = set()
+    for mi in rt:
+        for node in ast.walk(mi.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "join"):
+                tgt = node.func.value
+                if isinstance(tgt, ast.Attribute):
+                    joined_attrs.add(tgt.attr)
+                elif isinstance(tgt, ast.Name):
+                    joined_attrs.add(tgt.id)
+
+    for mi in rt:
+        yield from _check_module(mi, joined_attrs)
+
+
+def _is_thread_ctor(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "Thread":
+        return isinstance(f.value, ast.Name) and f.value.id == "threading"
+    if isinstance(f, ast.Name) and f.id == "Thread":
+        return True
+    return False
+
+
+def _check_module(mi: ModuleInfo, joined_attrs: Set[str]) -> Iterable[Violation]:
+    for qn, fn in iter_functions(mi.tree):
+        fname = qn.split(".<locals>.")[-1].split(".")[-1]
+        cls = _enclosing_class(qn)
+        fn_src_names = {n.id for n in ast.walk(fn) if isinstance(n, ast.Name)}
+        fn_attr_names = {n.attr for n in ast.walk(fn)
+                         if isinstance(n, ast.Attribute)}
+
+        # DL301 — Thread construction
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and _is_thread_ctor(node):
+                daemon = any(
+                    kw.arg == "daemon"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    for kw in node.keywords
+                )
+                if daemon:
+                    continue
+                # assigned to self.X or local later joined?
+                target_attr = _assigned_attr(fn, node)
+                if target_attr is not None and target_attr in joined_attrs:
+                    continue
+                if _daemon_set_after(fn, node, target_attr):
+                    continue
+                yield Violation(
+                    "DL301", mi.relpath, node.lineno,
+                    f"Thread created in {qn} is neither daemon=True nor "
+                    "joined anywhere in runtime/ (shutdown can hang on it)",
+                )
+
+        # DL302 — blocking loops and unbounded joins
+        handles_closed = _handles_channel_closed(fn)
+        has_stop_ref = bool(fn_src_names.intersection(STOP_TOKENS)
+                            or fn_attr_names.intersection(STOP_TOKENS))
+        for node in ast.walk(fn):
+            if isinstance(node, ast.While) and _is_while_true(node):
+                blocking = _blocking_get_lines(node)
+                if blocking and not (has_stop_ref or handles_closed):
+                    yield Violation(
+                        "DL302", mi.relpath, blocking[0],
+                        f"while-True loop in {qn} blocks on .get()/.recv() "
+                        "with no stop-token reference or ChannelClosed "
+                        "handler — unkillable without daemon teardown",
+                    )
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "join"
+                    and not node.args and not node.keywords):
+                base = node.func.value
+                # str.join(iterable) always has an argument; argless .join()
+                # here is a thread/queue join.
+                if fname not in SHUTDOWN_FN_NAMES:
+                    yield Violation(
+                        "DL302", mi.relpath, node.lineno,
+                        f"unbounded .join() in {qn} (only shutdown-path "
+                        "functions may block forever; pass a timeout)",
+                    )
+                del base
+
+        # DL303 — time.sleep outside the shaper
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "sleep"
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "time"
+                    and cls != "LinkChannel"):
+                yield Violation(
+                    "DL303", mi.relpath, node.lineno,
+                    f"time.sleep in {qn}: wall-clock pacing belongs only in "
+                    "LinkChannel's shaper; use condition waits elsewhere",
+                )
+
+
+def _assigned_attr(fn: ast.AST, call: ast.Call) -> Optional[str]:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and node.value is call:
+            t = node.targets[0]
+            if isinstance(t, ast.Attribute):
+                return t.attr
+            if isinstance(t, ast.Name):
+                return t.id
+    return None
+
+
+def _daemon_set_after(fn: ast.AST, call: ast.Call,
+                      target: Optional[str]) -> bool:
+    if target is None:
+        return False
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign)
+                and node.lineno > call.lineno
+                and isinstance(node.targets[0], ast.Attribute)
+                and node.targets[0].attr == "daemon"
+                and isinstance(node.value, ast.Constant)
+                and node.value.value is True):
+            base = node.targets[0].value
+            name = base.attr if isinstance(base, ast.Attribute) else (
+                base.id if isinstance(base, ast.Name) else None)
+            if name == target:
+                return True
+    return False
+
+
+def _is_while_true(node: ast.While) -> bool:
+    return isinstance(node.test, ast.Constant) and node.test.value is True
+
+
+def _blocking_get_lines(loop: ast.While) -> List[int]:
+    out: List[int] = []
+    for node in ast.walk(loop):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("get", "recv")
+                and not node.args and not node.keywords):
+            out.append(node.lineno)
+    return sorted(out)
+
+
+def _handles_channel_closed(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.ExceptHandler) and node.type is not None:
+            names = {n.id for n in ast.walk(node.type)
+                     if isinstance(n, ast.Name)}
+            attrs = {n.attr for n in ast.walk(node.type)
+                     if isinstance(n, ast.Attribute)}
+            if "ChannelClosed" in names or "ChannelClosed" in attrs:
+                return True
+    return False

@@ -1,0 +1,50 @@
+"""DL501 — token identity.
+
+The runtime's stop/retire/close singletons (``_STOP``, ``_RETIRE``,
+``_CLOSED``) are plain sentinel objects whose only meaningful comparison
+is identity.  ``==`` happens to work today, but any payload type that
+grows an ``__eq__`` (numpy arrays return elementwise arrays!) breaks a
+``==`` comparison silently.  This rule flags any ``==`` / ``!=`` whose
+left or right operand is one of the singleton names — use ``is`` /
+``is not``.
+
+Matching is by exact identifier name (bare or attribute), so integer wire
+tags like ``_F_STOP`` compared with ``==`` are untouched.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from tools.deferlint.core import ModuleInfo, Violation, checker
+
+SINGLETONS = {"_STOP", "_RETIRE", "_CLOSED"}
+
+
+def _token_name(expr: ast.AST):
+    if isinstance(expr, ast.Name) and expr.id in SINGLETONS:
+        return expr.id
+    if isinstance(expr, ast.Attribute) and expr.attr in SINGLETONS:
+        return expr.attr
+    return None
+
+
+@checker("token-identity")
+def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    for mi in mods:
+        for node in ast.walk(mi.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            operands = [node.left] + list(node.comparators)
+            for op, left, right in zip(node.ops, operands, operands[1:]):
+                if not isinstance(op, (ast.Eq, ast.NotEq)):
+                    continue
+                tok = _token_name(left) or _token_name(right)
+                if tok is not None:
+                    yield Violation(
+                        "DL501", mi.relpath, node.lineno,
+                        f"{tok} compared with "
+                        f"{'==' if isinstance(op, ast.Eq) else '!='}; "
+                        "sentinel singletons must use 'is' / 'is not'",
+                    )

@@ -1,0 +1,125 @@
+"""DL101/DL102 — wire-safety.
+
+DL101: every ``struct.unpack`` / ``struct.unpack_from`` must be preceded,
+lexically within the same function, by a call to the ``_checked`` bounds
+gate (``wire._checked`` or a local ``_checked``) covering the read.  The
+check is deliberately lexical, not dataflow: the runtime's convention is
+"call ``_checked(blob, off, n, what)`` on the line(s) right before the
+unpack", and the lint enforces that the convention is followed, not that
+arbitrary bounds logic is correct.  Sites that cannot follow the
+convention go in ``ALLOWLIST`` — currently only ``core/codecs.py``
+internals, whose sole callers (``wire.decode_array`` et al.) already wrap
+every decode error into ``WireFormatError``.
+
+DL102: ``pickle``/``marshal`` imports and ``eval``/``exec`` calls are
+banned in ``runtime/`` — nothing on the wire path may deserialize
+arbitrary objects or execute strings.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set, Tuple
+
+from tools.deferlint.core import (
+    ModuleInfo, Violation, checker, enclosing_function_map,
+)
+
+# (relpath suffix, enclosing-function qualname) pairs exempt from DL101.
+# Bar for adding an entry: the function is unreachable except through a
+# caller that already converts struct.error into WireFormatError, and the
+# buffer geometry is validated by that caller.
+ALLOWLIST: Set[Tuple[str, str]] = {
+    ("core/codecs.py", "_unpack_shape_dtype"),
+    ("core/codecs.py", "ZfpCodec.decode"),
+    ("core/codecs.py", "Lz4Codec.decompress"),
+    ("core/codecs.py", "Q8Codec.decode"),
+}
+
+
+def _is_checked_call(node: ast.Call) -> bool:
+    f = node.func
+    if isinstance(f, ast.Name) and f.id == "_checked":
+        return True
+    if isinstance(f, ast.Attribute) and f.attr == "_checked":
+        return True
+    return False
+
+
+@checker("wire-safety")
+def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    for mi in mods:
+        yield from _check_unpacks(mi)
+        if mi.in_runtime:
+            yield from _check_banned(mi)
+
+
+def _check_unpacks(mi: ModuleInfo) -> Iterable[Violation]:
+    encl = enclosing_function_map(mi.tree)
+    # gather per-function lists of (_checked lineno) and (unpack node)
+    checked_lines: dict = {}
+    unpacks: List[Tuple[str, ast.Call]] = []
+    for node in ast.walk(mi.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        where = encl.get(node)
+        qn = where[0] if where else "<module>"
+        if _is_checked_call(node):
+            checked_lines.setdefault(qn, []).append(node.lineno)
+        else:
+            f = node.func
+            is_unpack = (
+                isinstance(f, ast.Attribute)
+                and f.attr in ("unpack", "unpack_from")
+                and isinstance(f.value, ast.Name)
+                and f.value.id == "struct"
+            ) or (
+                isinstance(f, ast.Name)
+                and f.id in ("unpack", "unpack_from")
+            )
+            if is_unpack:
+                unpacks.append((qn, node))
+    for qn, node in unpacks:
+        if (_suffix_key(mi.relpath), qn) in ALLOWLIST:
+            continue
+        before = [ln for ln in checked_lines.get(qn, []) if ln <= node.lineno]
+        if before:
+            continue
+        yield Violation(
+            "DL101", mi.relpath, node.lineno,
+            f"struct.{node.func.attr if isinstance(node.func, ast.Attribute) else 'unpack'} "
+            f"in {qn} has no preceding _checked() bounds gate "
+            "(route through wire._checked or add an ALLOWLIST entry)",
+        )
+
+
+def _suffix_key(relpath: str) -> str:
+    parts = relpath.split("/")
+    return "/".join(parts[-2:]) if len(parts) >= 2 else relpath
+
+
+def _check_banned(mi: ModuleInfo) -> Iterable[Violation]:
+    for node in ast.walk(mi.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".")[0]
+                if root in ("pickle", "marshal"):
+                    yield Violation(
+                        "DL102", mi.relpath, node.lineno,
+                        f"import of {root!r} in runtime/ (wire payloads must "
+                        "use the framed codec path, never object pickling)",
+                    )
+        elif isinstance(node, ast.ImportFrom):
+            root = (node.module or "").split(".")[0]
+            if root in ("pickle", "marshal"):
+                yield Violation(
+                    "DL102", mi.relpath, node.lineno,
+                    f"import from {root!r} in runtime/",
+                )
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in ("eval", "exec"):
+                yield Violation(
+                    "DL102", mi.relpath, node.lineno,
+                    f"{f.id}() call in runtime/",
+                )
