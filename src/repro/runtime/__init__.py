@@ -5,6 +5,8 @@ from repro.runtime.controller import (Controller,  # noqa: F401
 from repro.runtime.dispatcher import (AdmissionFull,  # noqa: F401
                                       Dispatcher, DispatcherCodecs, NodeError)
 from repro.runtime.engine import EngineReport, InferenceEngine  # noqa: F401
+from repro.runtime.supervisor import (Supervisor,  # noqa: F401
+                                      SupervisorConfig, supervised_engine)
 from repro.runtime.topology import StageSpec, TopologySpec  # noqa: F401
 from repro.runtime.transport import (Channel, ChannelClosed,  # noqa: F401
                                      InprocTransport, LinkTransport,

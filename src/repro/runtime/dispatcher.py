@@ -156,7 +156,8 @@ class Dispatcher:
                  staged: bool = True,
                  client_quota: int | None = None,
                  shape_buckets: str = "exact",
-                 max_batch_cap: int | None = None):
+                 max_batch_cap: int | None = None,
+                 replica_factory=None):
         if isinstance(topology, int):
             topology = TopologySpec.chain(graph, topology)
         topology.validate(graph)
@@ -167,6 +168,12 @@ class Dispatcher:
         self._defaults = dict(max_batch=max_batch, queue_depth=queue_depth,
                               staged=staged, shape_buckets=shape_buckets,
                               max_batch_cap=max_batch_cap)
+        # optional replica provider: (dispatcher, stage, replica) -> a
+        # ComputeNode-shaped object, or None to fall back to the in-process
+        # default.  The process-per-replica supervisor plugs in here so
+        # spawn (__init__ AND scale) builds worker-backed replicas through
+        # the same path as in-process ones.
+        self._replica_factory = replica_factory
         self.partition: Partition = partition(
             graph, topology.num_stages,
             link=link, cuts=list(topology.cuts) or None,
@@ -187,7 +194,8 @@ class Dispatcher:
             topology.stages[-1].transport, 0)
         self.stages: list[StageGroup] = []
         for i, spec in enumerate(topology.stages):
-            replicas = [self._make_node(i, r) for r in range(spec.replicas)]
+            replicas = [self._make_replica(i, r)
+                        for r in range(spec.replicas)]
             group = StageGroup(i, spec, replicas, self._stage_inputs[i],
                                upstream=self.stages[i - 1] if i else None,
                                fail_batch=self._finish_batch)
@@ -264,6 +272,16 @@ class Dispatcher:
         if spec.coalesce_s is not None:
             node.coalesce_s = spec.coalesce_s
         return node
+
+    def _make_replica(self, stage: int, replica: int) -> ComputeNode:
+        """One replica via the pluggable factory (process-backed workers)
+        or the in-process default.  A factory may return None for stages
+        it does not manage."""
+        if self._replica_factory is not None:
+            node = self._replica_factory(self, stage, replica)
+            if node is not None:
+                return node
+        return self._make_node(stage, replica)
 
     @property
     def nodes(self) -> list[ComputeNode]:
@@ -769,15 +787,18 @@ class Dispatcher:
                 nxt = (self._stage_inputs[stage + 1]
                        if stage + 1 < len(self.stages)
                        else self.result_channel)
-                ref = live[0]
+                # inherit the stage's LIVE knobs, not the spec defaults:
+                # the controller tunes knobs uniformly per stage and
+                # compares against replica 0's values, so a default-knobbed
+                # newcomer would never be corrected.  A stage whose every
+                # replica crashed (supervisor respawn-from-zero) has no
+                # live reference; newcomers then keep spec defaults.
+                ref = live[0] if live else None
                 for k in range(replicas - cur):
-                    node = self._make_node(stage, next_r + k)
-                    # inherit the stage's LIVE knobs, not the spec
-                    # defaults: the controller tunes knobs uniformly per
-                    # stage and compares against replica 0's values, so a
-                    # default-knobbed newcomer would never be corrected
-                    node.max_batch = ref.max_batch
-                    node.coalesce_s = ref.coalesce_s
+                    node = self._make_replica(stage, next_r + k)
+                    if ref is not None:
+                        node.max_batch = ref.max_batch
+                        node.coalesce_s = ref.coalesce_s
                     node.configure(self.graph, lo, hi, arch_blob,
                                    weights_blob, self.codecs.weights)
                     node.next_inbox = nxt

@@ -94,7 +94,8 @@ class InferenceEngine:
                  client_quota: int | None = None,
                  shape_buckets: str = "exact",
                  max_batch_cap: int | None = None,
-                 controller: ControllerConfig | None = None):
+                 controller: ControllerConfig | None = None,
+                 replica_factory=None):
         """``topology`` is the serving shape: a
         :class:`~repro.runtime.topology.TopologySpec`, or an int ``n`` as
         shorthand for ``TopologySpec.chain(graph, n)`` (the paper's
@@ -112,7 +113,8 @@ class InferenceEngine:
                                      queue_depth=queue_depth, staged=staged,
                                      client_quota=client_quota,
                                      shape_buckets=shape_buckets,
-                                     max_batch_cap=max_batch_cap)
+                                     max_batch_cap=max_batch_cap,
+                                     replica_factory=replica_factory)
         # the serving-time feedback loop (opt-in): calibrate costs online,
         # repartition / scale behind an epoch fence, adapt batching knobs
         self.controller = (Controller(self.dispatcher, controller)

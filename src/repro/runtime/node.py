@@ -192,6 +192,12 @@ class ComputeNode:
         self._apply = None
         self._threads: list[threading.Thread] = []
         self._stats_lock = threading.Lock()
+        # live gauge (NOT a window counter — reset_stats leaves it):
+        # requests consumed off the inbox but not yet emitted downstream.
+        # A wedged compute thread that swallowed its whole backlog shows
+        # inbox qsize 0 (credits returned on consume), so stall detection
+        # needs this to see work trapped inside the pipeline.
+        self._inflight_n = 0
 
     @property
     def busy_s(self) -> float:
@@ -428,6 +434,7 @@ class ComputeNode:
                 "max_batch": self.max_batch,
                 "coalesce_s": self.coalesce_s,
                 "epoch": self.epoch,
+                "inflight_n": self._inflight_n,
             }
 
     # -- stage 1: ingress (decode) --------------------------------------------
@@ -529,6 +536,7 @@ class ComputeNode:
                 des_busy += dt
             with self._stats_lock:
                 self.busy_decode_s += des_busy
+                self._inflight_n += sum(len(e.extents) for e in wave)
             for env in relay:
                 self._to_compute.put(env)
             if decoded:
@@ -735,6 +743,8 @@ class ComputeNode:
             if isinstance(item, BatchEnvelope):
                 # error passthrough: relay in order, stamped
                 item.epoch = self._egress_epoch
+                with self._stats_lock:
+                    self._inflight_n -= len(item.extents)
                 self._relay(item)
                 continue
             # book only codec time as encode busy; the relay puts can block
@@ -761,6 +771,7 @@ class ComputeNode:
             with self._stats_lock:
                 self.busy_encode_s += enc_busy
                 self._record_trace(item.trace)
+                self._inflight_n -= sum(len(e.extents) for e in out_envs)
             for env in out_envs:
                 self._relay(env)
 
@@ -811,7 +822,10 @@ class ComputeNode:
                 batch.append(nxt)
             with self._stats_lock:
                 self._record_depth(len(batch) + self.inbox.qsize())
+                self._inflight_n += sum(len(e.extents) for e in batch)
             outs = self.process_batch(batch)
+            with self._stats_lock:
+                self._inflight_n -= sum(len(e.extents) for e in outs)
             for env in outs:
                 env.epoch = self._egress_epoch
                 self._relay(env)

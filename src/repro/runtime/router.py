@@ -196,7 +196,13 @@ class StageGroup:
     @classmethod
     def _ledger_depth(cls, m: ComputeNode) -> int:
         cap = getattr(m.inbox, "capacity", 0) or 0
-        return max(cls._LEDGER_DEPTH, 2 * cap)
+        # process-backed members (lost_on_death) lose their CONSUMED
+        # in-flight work too when they die, so the ledger must also cover
+        # the member's internal pipeline: up to ~3 waves of max_batch
+        # envelopes (ingress stash + compute + egress) beyond the channel
+        mb = (getattr(m, "max_batch_cap", None)
+              or getattr(m, "max_batch", 0) or 0)
+        return max(cls._LEDGER_DEPTH, 2 * cap + 4 * mb)
     # how long to wait for a dead member's threads to finish flushing
     # before proxying its fence/stop downstream (normally milliseconds —
     # the self-retire is immediate once the channel raises)
@@ -210,6 +216,16 @@ class StageGroup:
         # unconsumed tail (channel qsize, credit accounting) can be failed
         # instead of leaving those batches' futures hanging forever
         ledger: dict[int, deque] = {}
+        # per member that can report what it forwarded
+        # (``forwarded_tokens``, i.e. process-backed): [settled_prefix,
+        # control tokens sent on its link, in order].  A member can die
+        # AFTER a broadcast handed its fence/stop copy to the socket
+        # (the send succeeds into a doomed buffer) but BEFORE its egress
+        # forwarded the copy downstream — without settling that copy the
+        # downstream barrier is short one count forever and a mid-fence
+        # scale() wedges.  settle_tokens() proxies exactly the
+        # sent-minus-forwarded tail on death.
+        sent_tokens: dict[int, list] = {}
         rr = 0
         current_epoch = 0
         tally = FenceTally(self.upstream_members())
@@ -225,21 +241,53 @@ class StageGroup:
             outstanding credits.  A batch the replica had in fact already
             consumed may be failed spuriously (its late result is then
             ignored by the collector) — at-most-once on a dying link,
-            never a hang."""
-            try:
-                k = m.inbox.qsize()
-            except Exception:  # deferlint: swallow(depth probe on a dying link; 0 means nothing stranded)
-                k = 0
+            never a hang.  For a process-backed member
+            (``lost_on_death``) the replica's own pipeline died with the
+            link, so the CONSUMED-but-unfinished batches are gone too:
+            the whole ledger fails, and entries whose results already
+            reached the collector resolve to no-ops there."""
             dq = ledger.pop(id(m), None)
-            if not k or not dq:
+            if not dq:
                 return
-            for entry in list(dq)[-k:]:
+            if getattr(m, "lost_on_death", False):
+                entries = list(dq)
+            else:
+                try:
+                    k = m.inbox.qsize()
+                except Exception:  # deferlint: swallow(depth probe on a dying link; 0 means nothing stranded)
+                    k = 0
+                if not k:
+                    return
+                entries = list(dq)[-k:]
+            for entry in entries:
                 if entry is not None:
                     fail_extents(
                         entry,
                         f"stage {self.index} replica {m.replica}: inbox "
                         "link died with this batch in flight "
                         "(undeliverable)")
+
+        def settle_tokens(m: ComputeNode) -> None:
+            """Proxy the control tokens a dead member was SENT but never
+            forwarded.  Joining the member's threads first makes the
+            forwarded count final (and means everything it DID flush is
+            already downstream, so the proxies cannot overtake it); only
+            members exposing ``forwarded_tokens`` — process-backed, whose
+            consumed-but-unforwarded copies die with the process — need
+            this, and only they are tracked in ``sent_tokens``."""
+            rec = sent_tokens.pop(id(m), None)
+            if rec is None:
+                return
+            base, tokens = rec
+            for t in m._threads:
+                t.join(self._FLUSH_JOIN_S)
+            owed = tokens[m.forwarded_tokens() - base:]
+            try:
+                if m.next_inbox is not None:
+                    for item in owed:
+                        m.next_inbox.send(item)
+            except (ChannelClosed, OSError):
+                pass            # downstream gone too: nothing owed
 
         def on_member_death(m: ComputeNode) -> None:
             """Heal the routing set; the dead member's fence/stop copies
@@ -248,6 +296,7 @@ class StageGroup:
                 members.remove(m)
                 dead.append(m)
             fail_stranded(m)
+            settle_tokens(m)
 
         def member_send(m: ComputeNode, item, data: bool = False) -> bool:
             """Send + ledger-record one item to a member.  A DEAD link
@@ -270,10 +319,32 @@ class StageGroup:
             ledger.setdefault(id(m), deque(maxlen=self._ledger_depth(m))) \
                 .append(item.extents if isinstance(item, BatchEnvelope)
                         else None)
+            if not isinstance(item, BatchEnvelope) \
+                    and getattr(m, "forwarded_tokens", None) is not None:
+                rec = sent_tokens.setdefault(id(m), [0, []])
+                rec[1].append(item)
+                if len(rec[1]) > 16:
+                    # drop the confirmed-forwarded prefix (a stale read
+                    # only under-prunes — the relay count is monotonic)
+                    k = min(m.forwarded_tokens() - rec[0], len(rec[1]))
+                    if k > 0:
+                        del rec[1][:k]
+                        rec[0] += k
             return True
+
+        def probe_members() -> None:
+            """Proactively heal members whose channel reports itself dead
+            (the transport noticed the peer process vanish).  Waiting for
+            a send to fail is not enough: under lqd a dead member whose
+            frozen depth exceeds its siblings' is never picked again, so
+            its stranded batches' futures would hang until shutdown."""
+            for m in list(members):
+                if getattr(m.inbox, "dead", False):
+                    on_member_death(m)
 
         def route(env: BatchEnvelope) -> None:
             nonlocal rr
+            probe_members()
             if not members:
                 raise ChannelClosed(
                     f"stage {self.index}: no live replicas (all inbox "
@@ -303,7 +374,8 @@ class StageGroup:
             downstream channel, so the proxied token cannot overtake its
             pre-fence work (if the join times out — a wedged replica —
             the proxy goes ahead rather than deadlocking the router)."""
-            for m in list(members):
+            probe_members()     # a dead member's copy must be proxied, not
+            for m in list(members):     # lost in its socket's doomed buffer
                 member_send(m, item)
             for m in dead:
                 for t in m._threads:
@@ -366,10 +438,13 @@ class StageGroup:
                             # member owes downstream nothing, but its
                             # stranded batches must still fail (the
                             # ledger is popped only on a clean retire —
-                            # fail_stranded needs it)
+                            # fail_stranded needs it), and any fence copy
+                            # it never forwarded must be settled
                             fail_stranded(m)
+                            settle_tokens(m)
                         else:
-                            ledger.pop(id(m), None)     # clean exit
+                            ledger.pop(id(m), None)     # clean exit: it
+                            sent_tokens.pop(id(m), None)    # flushes all
                     elif m in dead:
                         # a dead member can't flush; its fence copy was
                         # proxied and its threads already self-retired —

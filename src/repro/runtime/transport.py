@@ -92,6 +92,16 @@ class Channel:
         every channel makes lqd degrade gracefully to round-robin."""
         return 0
 
+    @property
+    def dead(self) -> bool:
+        """True once the channel can never carry another item (killed, or
+        the peer endpoint is known gone).  Routers probe this so a member
+        whose process died is healed even while no send is in flight —
+        without it, stranded batches would wait for the next send to that
+        member, which under least-queue-depth routing may never come.
+        Backends without liveness knowledge keep the default False."""
+        return False
+
     def close(self) -> None:
         """Release the channel's resources and drop it from its owning
         transport's live count (see :func:`register_transport`).  Safe to
@@ -257,6 +267,7 @@ class TcpChannel(Channel):
         self._recv_sock: socket.socket | None = None
         self._attached = threading.Event()
         self._killed = False
+        self._peer_lost = False
 
     # -- wiring (transport-internal) ------------------------------------------
     def _open_send_side(self, sock: socket.socket) -> None:
@@ -282,6 +293,7 @@ class TcpChannel(Channel):
         finally:
             # a dead credit stream would block senders forever: flood the
             # window open so their next send hits the socket error instead
+            self._peer_lost = True
             self._window.flood()
 
     def _read_loop(self) -> None:
@@ -293,12 +305,27 @@ class TcpChannel(Channel):
         except (OSError, ConnectionError, _wire.WireFormatError):
             # EOF, reset, or an unrecoverable framing desync: the stream
             # cannot be resynchronized, so the channel is dead
+            self._peer_lost = True
             self._recv_q.put(_CLOSED)
 
     # -- Channel API ----------------------------------------------------------
+    def wait_attached(self, timeout: float = 10.0) -> None:
+        """Block until the peer wires this half (expect_channel halves
+        are exposed before their remote peer dials in)."""
+        if not self._attached.wait(timeout):
+            raise ChannelClosed(
+                f"tcp half-channel peer never attached within {timeout}s")
+
     def send(self, item: Any) -> None:
         if self._killed:
             raise ChannelClosed("tcp channel was killed")
+        if not self._attached.is_set():
+            # an expect_channel send half raced its peer's dial: the
+            # accept loop wires it asynchronously, so wait instead of
+            # tripping over a not-yet-assigned socket
+            self.wait_attached()
+            if self._killed:
+                raise ChannelClosed("tcp channel was killed")
         blob = _wire.frame(item)
         if len(blob) >= 1 << 32:
             # validated BEFORE any credit accounting so an oversized
@@ -341,13 +368,18 @@ class TcpChannel(Channel):
     def qsize(self) -> int:
         return self._window.outstanding()
 
+    @property
+    def dead(self) -> bool:
+        return self._killed or self._peer_lost
+
     def kill(self) -> None:
         """Sever the connection as a network failure would: both socket
         halves close, in-flight frames are lost, the next ``send`` raises
         :class:`ChannelClosed` and blocked ``recv`` callers wake with the
         same — the failure-injection hook the kill-the-socket tests use."""
         self._killed = True
-        for s in (self._send_sock, self._recv_sock):
+        self._attached.set()        # unblock senders waiting on a peer
+        for s in (self._send_sock, self._recv_sock):    # that never dials
             if s is not None:
                 try:
                     s.shutdown(socket.SHUT_RDWR)
@@ -375,10 +407,17 @@ class TcpTransport(Transport):
 
     name = "tcp"
 
+    # a connection that sends a partial hello then stalls would otherwise
+    # pin the single accept thread forever (half-open handshake): the
+    # hello read runs under this socket timeout and a stalled client is
+    # dropped, after which the accept loop serves the next connection
+    handshake_timeout_s = 5.0
+
     def __init__(self, host: str = "127.0.0.1"):
         self._host = host
         self._listener: socket.socket | None = None
         self._pending: dict[int, TcpChannel] = {}
+        self._roles: dict[int, str] = {}    # cid -> local half ("send"/"recv")
         self._next_cid = 0
         self._lock = threading.Lock()
 
@@ -407,17 +446,28 @@ class TcpTransport(Transport):
                 return
             try:
                 conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                # the 4-byte hello names the channel this connection backs
+                # the 4-byte hello names the channel this connection backs.
+                # socket.timeout is an OSError, so a half-open client that
+                # stalls mid-hello lands here and is dropped
+                conn.settimeout(self.handshake_timeout_s)
                 cid = _recv_u32(conn, "tcp channel hello")
+                conn.settimeout(None)       # read loops expect blocking IO
             except (OSError, ConnectionError, _wire.WireFormatError):
                 conn.close()
                 continue
             with self._lock:
                 ch = self._pending.pop(cid, None)
+                role = self._roles.pop(cid, "recv")
             if ch is None:
                 conn.close()
                 continue
-            ch._attach(conn)
+            if role == "send":
+                # a half-channel registered by expect_channel(role="send"):
+                # this side only transmits, the dialing peer receives
+                ch._open_send_side(conn)
+                ch._attached.set()
+            else:
+                ch._attach(conn)
 
     def channel(self, capacity: int = 0) -> Channel:
         self._ensure_listener()
@@ -449,6 +499,114 @@ class TcpTransport(Transport):
                 raise
             raise ChannelClosed(f"tcp channel setup failed: {e}") from e
         return self._track(ch)
+
+    def expect_channel(self, capacity: int = 0,
+                       role: str = "send") -> tuple[TcpChannel, int]:
+        """Register a cross-process half-channel and return ``(channel,
+        cid)``.  A remote peer completes it by dialing this transport's
+        listener and sending ``cid`` as the hello
+        (:func:`dial_channel`); until then the local half is unattached
+        (``wait_attached``).  ``role`` names the LOCAL half: ``"send"``
+        (this process transmits, the peer receives — e.g. a worker's
+        inbox held by the supervisor) or ``"recv"`` (the peer transmits
+        into this process — e.g. a worker's output stream).  Unlike
+        :meth:`channel`, nothing dials back: the peer only ever connects
+        *in*, so workers never need a listener of their own."""
+        if role not in ("send", "recv"):
+            raise ValueError(f"bad channel role {role!r}")
+        self._ensure_listener()
+        ch = TcpChannel(capacity)
+        with self._lock:
+            cid = self._next_cid
+            self._next_cid += 1
+            self._pending[cid] = ch
+            self._roles[cid] = role
+        return self._track(ch), cid
+
+    def unexpect_channel(self, cid: int) -> None:
+        """Drop a pending expect_channel registration whose peer never
+        arrived (spawn failure cleanup): a late dial with this cid then
+        meets a closed connection instead of wiring a discarded channel."""
+        with self._lock:
+            self._pending.pop(cid, None)
+            self._roles.pop(cid, None)
+
+    def close(self) -> None:
+        """Close the listener socket (the accept thread exits).  Already
+        wired channels keep their pooled connections; pending
+        expect_channel halves can no longer be completed.  For private
+        transport instances (e.g. a supervisor's data plane) — the shared
+        registry instance from :func:`get_transport` should outlive any
+        one engine."""
+        with self._lock:
+            listener = self._listener
+        if listener is not None:
+            try:
+                listener.close()
+            except OSError:
+                pass
+
+
+def dial_channel(host: str, port: int, cid: int, role: str,
+                 capacity: int = 0, timeout: float = 10.0) -> TcpChannel:
+    """Complete a half-channel a remote :meth:`TcpTransport.expect_channel`
+    registered: connect to its listener, send the cid hello, and wire the
+    LOCAL half (``role``: ``"send"`` or ``"recv"`` — the opposite of what
+    the registering side chose).  The worker-side entry point for
+    cross-process channels."""
+    if role not in ("send", "recv"):
+        raise ValueError(f"bad channel role {role!r}")
+    sock = socket.create_connection((host, port), timeout=timeout)
+    try:
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.sendall(struct.pack("<I", cid))
+        sock.settimeout(None)               # read loops expect blocking IO
+    except OSError as e:
+        try:
+            sock.close()
+        except OSError:
+            pass
+        raise ChannelClosed(f"tcp dial failed: {e}") from e
+    ch = TcpChannel(capacity)
+    if role == "send":
+        ch._open_send_side(sock)
+        ch._attached.set()
+    else:
+        ch._attach(sock)
+    return ch
+
+
+# -- framed control streams (supervisor <-> worker sideband) -------------------
+
+def send_framed(sock: socket.socket, item: Any,
+                lock: threading.Lock | None = None) -> None:
+    """Write one channel item onto a raw socket with the same
+    ``[u32 length][wire.frame bytes]`` layout the TCP channels speak.
+    Used by the supervisor/worker control sockets, which carry
+    :class:`~repro.runtime.wire.ControlFrame` heartbeats and the initial
+    :class:`~repro.runtime.wire.ReconfigMarker` config+weights handoff
+    without the credit-window machinery (control traffic is tiny and
+    strictly request/reply or periodic)."""
+    blob = _wire.frame(item)
+    if len(blob) >= 1 << 32:
+        raise _wire.WireFormatError(
+            f"control frame of {len(blob)} bytes exceeds the 4-byte "
+            "length prefix")
+    payload = struct.pack("<I", len(blob)) + blob
+    if lock is not None:
+        with lock:
+            sock.sendall(payload)
+    else:
+        sock.sendall(payload)
+
+
+def recv_framed(sock: socket.socket) -> Any:
+    """Read one ``[u32 length][wire.frame bytes]`` item from a raw socket
+    (blocking; honors the socket's own timeout).  EOF or truncation raise
+    :class:`~repro.runtime.wire.WireFormatError` like every other wire
+    read."""
+    ln = _recv_u32(sock, "control frame length prefix")
+    return _wire.unframe(_recv_exact(sock, ln))
 
 
 # -- emulated link (the paper's CORE conditions, unprivileged) -----------------

@@ -247,6 +247,21 @@ class ReconfigMarker:
     plans: dict[int, NodePlan]          # stage index -> its new assignment
 
 
+@dataclasses.dataclass
+class ControlFrame:
+    """One supervisor <-> worker control-plane message (frame type
+    ``_F_CONTROL``): heartbeats (``kind="hb"`` carrying a node snapshot),
+    config/knob handoff, readiness acks, chaos injection, and the clean
+    ``"bye"`` a worker sends before a deliberate exit (so the supervisor
+    can tell a drained worker from a crashed one).  The payload is a
+    JSON-able dict (tuple-tagged like client ids) — weights never ride a
+    ControlFrame; they ship as the existing :class:`ReconfigMarker` /
+    :class:`NodePlan` framing on the same byte stream."""
+
+    kind: str
+    payload: dict = dataclasses.field(default_factory=dict)
+
+
 @dataclasses.dataclass(frozen=True)
 class WireCodec:
     serializer: str = "zfp"     # "json" | "zfp" | "q8" | "raw"
@@ -396,12 +411,16 @@ def _checked(blob: bytes, off: int, n: int, what: str) -> int:
 # anywhere: a malicious or corrupt peer can at worst raise WireFormatError.
 
 FRAME_MAGIC = b"DW"
-FRAME_VERSION = 1
+# v2 added the control-plane frame type (_F_CONTROL: heartbeats, worker
+# config/knob/bye messages); readers reject any other version outright, so
+# a v1 peer meets a clean WireFormatError instead of a silent misparse
+FRAME_VERSION = 2
 
 _F_ENVELOPE = 1
 _F_MARKER = 2
 _F_STOP = 3
 _F_RETIRE = 4
+_F_CONTROL = 5
 
 _NONE_U32 = 0xFFFFFFFF
 
@@ -533,6 +552,9 @@ def frame(item: Any) -> bytes:
             parts.append(plan.weights_blob)
             parts.append(_pack_bytes(_codec_fields(plan.weights_codec)))
         return b"".join(parts)
+    if isinstance(item, ControlFrame):
+        return (head(_F_CONTROL) + _pack_bytes(item.kind.encode())
+                + _pack_bytes(_pack_obj(item.payload)))
     raise WireFormatError(
         f"{type(item).__name__} is not a channel item (expected "
         "BatchEnvelope, ReconfigMarker, or a control token)")
@@ -604,6 +626,27 @@ def _unframe_marker(blob: bytes, off: int) -> ReconfigMarker:
     return ReconfigMarker(epoch, plans)
 
 
+def _unframe_control(blob: bytes, off: int) -> ControlFrame:
+    off = _checked(blob, off, 4, "control kind length")
+    (lk,) = struct.unpack_from("<I", blob, off - 4)
+    off = _checked(blob, off, lk, "control kind")
+    try:
+        kind = blob[off - lk:off].decode()
+    except UnicodeDecodeError as e:
+        raise WireFormatError(f"corrupt control kind: {e}") from e
+    off = _checked(blob, off, 4, "control payload length")
+    (lp,) = struct.unpack_from("<I", blob, off - 4)
+    off = _checked(blob, off, lp, "control payload")
+    payload = _unpack_obj(blob[off - lp:off])
+    if off != len(blob):
+        raise WireFormatError(
+            f"corrupt control frame: {len(blob) - off} trailing bytes")
+    if not isinstance(payload, dict):
+        raise WireFormatError(
+            f"control payload must be a dict, got {type(payload).__name__}")
+    return ControlFrame(kind, payload)
+
+
 def unframe(blob: bytes) -> Any:
     """Parse one framed channel item.  Every read is bounds-checked; any
     malformation — short buffer, bad magic, unknown version or type,
@@ -627,6 +670,8 @@ def unframe(blob: bytes) -> Any:
             return _unframe_envelope(blob, 4)
         if ftype == _F_MARKER:
             return _unframe_marker(blob, 4)
+        if ftype == _F_CONTROL:
+            return _unframe_control(blob, 4)
         raise WireFormatError(f"unknown frame type {ftype}")
     except WireFormatError:
         raise

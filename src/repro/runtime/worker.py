@@ -1,0 +1,241 @@
+"""Worker process entrypoint: one stage replica in its own OS process.
+
+Run as ``python -m repro.runtime.worker --connect HOST:PORT --token T``.
+The worker dials the supervisor's control listener, identifies itself
+with the spawn token, and then follows a strictly serial control loop on
+that socket:
+
+* ``ControlFrame("config")`` — build the layer graph locally (the graph
+  *code* is pre-installed on every device, exactly the paper's setting;
+  only topology and weights travel), dial both data channels back into
+  the supervisor's private :class:`~repro.runtime.transport.TcpTransport`
+  listener (:func:`~repro.runtime.transport.dial_channel` — the worker
+  never opens a listener of its own), and build the
+  :class:`~repro.runtime.node.ComputeNode` this process serves.
+* a framed :class:`~repro.runtime.wire.ReconfigMarker` — the
+  configuration step: architecture spec + weights arrive over the wire
+  (``NodePlan`` framing, same bytes a live repartition ships) and the
+  node materializes its partition.
+* ``"precompile"`` / ``"start"`` / ``"knobs"`` / ``"reset_stats"`` —
+  lifecycle and tuning, applied in order (the loop is serial, so a
+  ``"start"`` can never overtake the config that precedes it).  After
+  ``"start"`` the worker acks ``"ready"`` and begins heartbeating.
+* ``"chaos"`` — fault injection (hang the compute stage), honored only
+  when the process was launched with ``--chaos``; production spawns
+  ignore it.
+
+Everything after ``"start"`` is the normal data path: envelopes and
+fence markers arrive on the worker's inbox channel exactly as they would
+on an in-process replica, so live repartitions, scale fences, and the
+_STOP/_RETIRE drain protocol all work unchanged across the process
+boundary.
+
+When the node's stage threads exit (a clean drain: _STOP or a retire
+fence flushed it), the worker sends ``"bye"`` on the control socket and
+exits — that frame is how the supervisor distinguishes a deliberate
+drain from a crash (a crash is control-EOF *without* bye, or a missed
+heartbeat).  Every auxiliary thread is a daemon: the process can always
+exit, whatever state the chain was in.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import os
+import socket
+import sys
+import threading
+
+from repro.runtime.node import ComputeNode
+from repro.runtime.transport import dial_channel, recv_framed, send_framed
+from repro.runtime.wire import (ControlFrame, ReconfigMarker, WireCodec,
+                                WireFormatError)
+
+
+def load_graph_factory(spec: str):
+    """Resolve ``"pkg.module:fn"`` or ``"/path/to/file.py:fn"`` to the
+    graph-factory callable.  The file-path form lets test helpers and
+    benchmark scripts that are not importable packages supply graphs."""
+    modpath, sep, fn_name = spec.rpartition(":")
+    if not sep or not modpath or not fn_name:
+        raise ValueError(
+            f"bad graph factory {spec!r} (want 'module:fn' or 'file.py:fn')")
+    if modpath.endswith(".py"):
+        if not os.path.isfile(modpath):
+            raise ImportError(f"graph module {modpath!r} does not exist")
+        name = "_defer_worker_graph"
+        loader_spec = importlib.util.spec_from_file_location(name, modpath)
+        if loader_spec is None or loader_spec.loader is None:
+            raise ImportError(f"cannot load graph module {modpath!r}")
+        mod = importlib.util.module_from_spec(loader_spec)
+        sys.modules[name] = mod
+        loader_spec.loader.exec_module(mod)
+    else:
+        mod = importlib.import_module(modpath)
+    return getattr(mod, fn_name)
+
+
+class Worker:
+    """The per-process runtime around one :class:`ComputeNode`."""
+
+    def __init__(self, sock: socket.socket, allow_chaos: bool = False):
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self._allow_chaos = allow_chaos
+        self._node: ComputeNode | None = None
+        self._graph = None
+        self._stage = -1
+        self._hb_interval_s = 0.5
+        self._stop = threading.Event()
+
+    def _send(self, frame: ControlFrame) -> None:
+        send_framed(self._sock, frame, lock=self._send_lock)
+
+    # -- control handlers -----------------------------------------------------
+    def _on_config(self, p: dict) -> None:
+        factory = load_graph_factory(p["graph_factory"])
+        self._graph = factory(**(p.get("graph_args") or {}))
+        ser, comp, rate, vec = p["data_codec"]
+        codec = WireCodec(ser, comp, zfp_rate=rate, vectorized=vec)
+        host, port = p["host"], p["port"]
+        inbox = dial_channel(host, port, p["in_cid"], role="recv",
+                             capacity=p["in_capacity"])
+        out = dial_channel(host, port, p["out_cid"], role="send",
+                           capacity=p["out_capacity"])
+        self._stage = p["stage"]
+        self._hb_interval_s = float(p.get("heartbeat_s", 0.5))
+        node = ComputeNode(
+            p["stage"], codec, replica=p["replica"],
+            max_batch=p["max_batch"], staged=p.get("staged", True),
+            shape_buckets=p.get("shape_buckets", "exact"),
+            max_batch_cap=p.get("max_batch_cap"),
+            inbox=inbox)
+        node.coalesce_s = float(p["coalesce_s"])
+        node.next_inbox = out
+        self._node = node
+
+    def _on_knobs(self, p: dict) -> None:
+        node = self._node
+        if node is None:
+            return
+        if "max_batch" in p:
+            node.max_batch = min(max(1, int(p["max_batch"])),
+                                 node.max_batch_cap)
+        if "coalesce_s" in p:
+            node.coalesce_s = max(0.0, float(p["coalesce_s"]))
+
+    def _on_chaos(self, p: dict) -> None:
+        if not self._allow_chaos:
+            return          # fault injection is opt-in at spawn time
+        if p.get("action") == "hang_compute":
+            # replace the jitted apply with a wait that never completes:
+            # the compute stage wedges mid-batch while every OTHER thread
+            # (ingress, heartbeat, control) stays perfectly healthy — the
+            # scenario heartbeat-only detection must NOT page on, and
+            # stall detection (snapshot frozen + inbox backlog) must
+            hang = threading.Event()
+            self._node._apply = lambda *_a, **_k: hang.wait()
+        elif p.get("action") == "slow_compute":
+            # dilate each apply by a host-side sleep: batches dwell in
+            # compute long enough for chaos tests to land a SIGKILL
+            # reliably *mid-batch*, and for slow-but-alive workers to
+            # exercise the no-false-positive side of failure detection
+            delay = float(p.get("delay_s", 0.05))
+            orig = self._node._apply
+            pause = threading.Event()
+            self._node._apply = (lambda *a, _o=orig, **k:
+                                 (pause.wait(delay), _o(*a, **k))[1])
+
+    def _on_start(self) -> None:
+        self._node.start()
+        threading.Thread(target=self._heartbeat_loop, daemon=True).start()
+        threading.Thread(target=self.drain, daemon=True).start()
+        self._send(ControlFrame("ready", {"pid": os.getpid()}))
+
+    # -- background threads ---------------------------------------------------
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.wait(self._hb_interval_s):
+            try:
+                self._send(ControlFrame(
+                    "hb", {"snapshot": self._node.snapshot()}))
+            except OSError:
+                return      # control stream gone: the supervisor owns cleanup
+
+    def drain(self) -> None:
+        """Wait for the node's stage threads to exit — a clean flush via
+        _STOP or a retire fence — then send the deliberate ``"bye"`` and
+        unblock the main control loop so the process exits zero."""
+        self._node.join()
+        self._stop.set()
+        try:
+            self._send(ControlFrame("bye", {}))
+        except OSError:
+            pass            # supervisor already gone; exiting is enough
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass            # racing close: the control loop is done anyway
+
+    # -- the serial control loop ----------------------------------------------
+    def run(self) -> int:
+        while True:
+            try:
+                item = recv_framed(self._sock)
+            except (WireFormatError, OSError):
+                # control EOF: a drained worker already sent bye; anything
+                # else means the supervisor died — either way, exit (all
+                # other threads are daemons)
+                return 0
+            if isinstance(item, ReconfigMarker):
+                # the configuration step: the initial partition arrives as
+                # the same NodePlan framing a live repartition ships
+                plan = item.plans.get(self._stage)
+                if plan is not None and self._node is not None:
+                    self._node.configure(
+                        self._graph, plan.lo, plan.hi, plan.arch_blob,
+                        plan.weights_blob, plan.weights_codec)
+                continue
+            if not isinstance(item, ControlFrame):
+                continue
+            if item.kind == "config":
+                self._on_config(item.payload)
+            elif item.kind == "precompile":
+                self._node.precompile()
+            elif item.kind == "start":
+                self._on_start()
+            elif item.kind == "knobs":
+                self._on_knobs(item.payload)
+            elif item.kind == "reset_stats":
+                self._node.reset_stats()
+            elif item.kind == "chaos":
+                self._on_chaos(item.payload)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.runtime.worker",
+        description="DEFER stage-replica worker (spawned by the "
+                    "runtime supervisor; not usually run by hand)")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="the supervisor's control listener")
+    ap.add_argument("--token", default="",
+                    help="spawn token identifying this replica slot")
+    ap.add_argument("--chaos", action="store_true",
+                    help="honor ControlFrame('chaos') fault injection")
+    args = ap.parse_args(argv)
+    host, _, port = args.connect.rpartition(":")
+    sock = socket.create_connection((host, int(port)), timeout=10.0)
+    # the timeout covers CONNECTING only: left on the socket it would turn
+    # any 10s-quiet control stream into a TimeoutError in the recv loop —
+    # read as "supervisor died", exiting a perfectly healthy worker
+    sock.settimeout(None)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    worker = Worker(sock, allow_chaos=args.chaos)
+    send_framed(sock, ControlFrame(
+        "hello", {"token": args.token, "pid": os.getpid()}))
+    return worker.run()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

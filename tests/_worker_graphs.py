@@ -1,0 +1,33 @@
+"""Graph factories for process-backed workers in tests.
+
+Worker processes rebuild the layer graph locally from a factory named in
+:class:`~repro.runtime.supervisor.SupervisorConfig` — tests point at this
+file with the path form (``"/abs/path/_worker_graphs.py:mlp_graph"``,
+resolved by :func:`repro.runtime.worker.load_graph_factory`) because the
+``tests`` directory is not an installed package.  Everything here must be
+importable with only ``src`` on ``sys.path``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import LayerGraph
+
+D = 16
+
+
+def mlp_graph(depth: int = 6, d: int = D) -> LayerGraph:
+    """The toy tanh MLP the runtime tests standardize on — deterministic,
+    so the supervisor-side and worker-side copies agree layer for layer."""
+    shape = (1, d)
+    g = LayerGraph("toy-mlp", jax.ShapeDtypeStruct(shape, np.float32))
+    prev = ""
+    for i in range(depth):
+        g.layer(f"fc{i}",
+                lambda p, x: jnp.tanh(x @ p["w"]),
+                {"w": jax.ShapeDtypeStruct((d, d), np.float32)},
+                (prev,),
+                jax.ShapeDtypeStruct(shape, np.float32),
+                flops=2.0 * d * d)
+        prev = f"fc{i}"
+    return g

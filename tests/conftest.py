@@ -1,6 +1,7 @@
 import os
 import sys
 import threading
+import time
 
 import pytest
 
@@ -34,12 +35,40 @@ def _lockdep_session_check():
         )
 
 
+def _live_child_pids() -> set[int]:
+    """Pids of live (non-zombie) direct children of this process, via
+    /proc — no psutil dependency.  Zombies are excluded: an exited child
+    awaiting a reap is subprocess bookkeeping, not an orphan that will
+    outlive the test run."""
+    me = os.getpid()
+    pids: set[int] = set()
+    try:
+        entries = os.listdir("/proc")
+    except OSError:
+        return pids                 # non-procfs platform: nothing to check
+    for ent in entries:
+        if not ent.isdigit():
+            continue
+        try:
+            with open(f"/proc/{ent}/stat", "r") as f:
+                fields = f.read().rsplit(")", 1)[-1].split()
+            # post-comm fields: [0]=state, [1]=ppid
+            if int(fields[1]) == me and fields[0] != "Z":
+                pids.add(int(ent))
+        except (OSError, IndexError, ValueError):
+            continue                # raced a pid that just exited
+    return pids
+
+
 @pytest.fixture(autouse=True)
 def _no_thread_leaks():
-    """Fail any test that leaves stray non-daemon threads running: a
-    non-daemon leak means some runtime object was not shut down, and the
-    whole interpreter would hang at exit in production."""
+    """Fail any test that leaves stray non-daemon threads OR live child
+    processes behind: a non-daemon thread leak means some runtime object
+    was not shut down (the interpreter would hang at exit in production),
+    and a child-process leak means a supervisor or worker outlived its
+    test — an orphan eating a CPU until the CI box is recycled."""
     before = set(threading.enumerate())
+    procs_before = _live_child_pids()
     yield
     strays = _lockdep.running_nondaemon_threads(before)
     if strays:
@@ -51,4 +80,16 @@ def _no_thread_leaks():
     assert not strays, (
         "test leaked non-daemon threads (missing shutdown/join): "
         + ", ".join(repr(t) for t in strays)
+    )
+    leaked = _live_child_pids() - procs_before
+    if leaked:
+        # same grace for process teardown (a reaped worker needs a moment
+        # to leave the process table), then re-scan before declaring
+        deadline = time.monotonic() + 2.0
+        while leaked and time.monotonic() < deadline:
+            time.sleep(0.05)
+            leaked = _live_child_pids() - procs_before
+    assert not leaked, (
+        "test leaked live child processes (missing Supervisor.close()/"
+        f"reap): pids {sorted(leaked)}"
     )

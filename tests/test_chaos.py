@@ -1,0 +1,317 @@
+"""Chaos drills: kill/hang/sever worker processes under closed-loop load
+and prove the serving contract — a fault fails exactly the batches it
+stranded (NodeError, never a hang), the chain keeps answering on the
+survivors, the supervisor respawns within its backoff window, an
+exhausted respawn budget degrades instead of wedging or storming, and a
+full kill/respawn/kill cycle resolves every single future.
+
+All tests here spawn real worker processes (SupervisorConfig with
+``allow_chaos=True``) and are marked slow; the fast smoke lives in
+test_supervisor.py."""
+import os
+import signal
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import NodeError, TopologySpec
+from repro.runtime.dispatcher import DispatcherCodecs
+from repro.runtime.supervisor import (SupervisorConfig, WorkerHandle,
+                                      supervised_engine)
+from repro.runtime.wire import WireCodec
+from tests._worker_graphs import mlp_graph
+from tools.chaos import Chaos
+
+pytestmark = pytest.mark.slow
+
+GRAPHS = os.path.join(os.path.dirname(__file__), "_worker_graphs.py")
+RAW = DispatcherCodecs(data=WireCodec("raw", "none"),
+                       weights=WireCodec("raw", "none"))
+D = 16
+
+
+def _cfg(**kw):
+    kw.setdefault("graph_factory", GRAPHS + ":mlp_graph")
+    kw.setdefault("heartbeat_s", 0.1)
+    kw.setdefault("heartbeat_timeout_s", 5.0)
+    kw.setdefault("backoff_initial_s", 0.1)
+    kw.setdefault("backoff_max_s", 0.5)
+    kw.setdefault("shutdown_grace_s", 5.0)
+    kw.setdefault("allow_chaos", True)
+    return SupervisorConfig(**kw)
+
+
+def _build(cfg, replicas=2, **engine_kw):
+    g = mlp_graph()
+    params = g.init(jax.random.PRNGKey(0))
+    topo = TopologySpec.chain(g, 2).with_replicas(0, replicas)
+    engine_kw.setdefault("codecs", RAW)
+    engine_kw.setdefault("max_batch", 4)
+    eng, sup = supervised_engine(g, params, topo, cfg, **engine_kw)
+    return g, params, eng, sup
+
+
+class _Load:
+    """Closed-loop clients: each keeps exactly one request in flight.
+    Every future must resolve — with a value or a NodeError; anything
+    else (timeout, foreign exception) is a hang/contract violation."""
+
+    def __init__(self, eng, clients=4, timeout=60.0):
+        self.eng = eng
+        self.timeout = timeout
+        self.ok = 0
+        self.failed = 0
+        self.violations: list[str] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._threads = [threading.Thread(target=self._run, args=(c,),
+                                          daemon=True)
+                         for c in range(clients)]
+
+    def __enter__(self):
+        for t in self._threads:
+            t.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def _run(self, cid):
+        i = 0
+        while not self._stop.is_set():
+            x = np.random.default_rng(i).normal(size=(1, D)) \
+                .astype(np.float32)
+            f = self.eng.submit(x, client_id=f"c{cid}")
+            try:
+                f.result(timeout=self.timeout)
+                with self._lock:
+                    self.ok += 1
+            except NodeError:
+                with self._lock:
+                    self.failed += 1
+            except Exception as e:     # noqa: BLE001 - the assertion itself
+                with self._lock:
+                    self.violations.append(f"{type(e).__name__}: {e}")
+                return
+            i += 1
+
+    def stop(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(self.timeout + 30)
+        assert not any(t.is_alive() for t in self._threads), \
+            "load client hung: some future never resolved"
+        assert not self.violations, \
+            f"futures must resolve with a value or NodeError: " \
+            f"{self.violations}"
+
+
+def test_kill_mid_batch_fails_only_stranded_chain_keeps_serving():
+    """SIGKILL one of two stage-0 worker processes mid-batch under
+    closed-loop load: the stranded batches fail with NodeError, nothing
+    hangs, the chain keeps answering on the survivor, and the supervisor
+    respawns the replica within the backoff window."""
+    g, params, eng, sup = _build(_cfg())
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        # dwell in compute so the kill lands mid-batch, not between them
+        for h in chaos.workers(stage=0):
+            chaos.slow_compute(h, 0.05)
+        with _Load(eng) as load:
+            deadline = time.monotonic() + 20
+            while load.ok < 20 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert load.ok >= 20, "load never ramped"
+            chaos.kill(chaos.pick(stage=0))
+            death = chaos.wait_death(stage=0, timeout=30)[0]
+            assert "exited" in death["why"]
+            # respawn within the backoff window: budget 3 x max 0.5s
+            # backoff, plus spawn+configure time — call it 30s, not minutes
+            chaos.wait_respawn(stage=0, timeout=30)
+            assert chaos.wait_stage_full(eng.dispatcher, 0,
+                                         timeout=30) == 2
+        # closed-loop accounting: everything resolved, the kill cost at
+        # most the batches inside the dead worker's pipeline
+        assert load.failed <= 4 * eng.dispatcher._defaults["queue_depth"]
+        # and the healed chain still answers with reference numerics
+        x = np.random.default_rng(7).normal(size=(1, D)).astype(np.float32)
+        np.testing.assert_allclose(
+            eng.submit(x).result(timeout=60),
+            np.asarray(g.apply(params, x)), atol=1e-5)
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_kill_respawn_kill_cycle_zero_hangs():
+    """Two kills with a respawn between them, all under load: every
+    future resolves (ok or NodeError), both deaths heal, and shutdown is
+    clean — the full cycle the self-healing loop must survive."""
+    g, params, eng, sup = _build(_cfg())
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        with _Load(eng) as load:
+            for round_no in (1, 2):
+                deadline = time.monotonic() + 20
+                base = load.ok
+                while load.ok < base + 10 and time.monotonic() < deadline:
+                    time.sleep(0.02)
+                chaos.kill(chaos.pick(stage=0))
+                chaos.wait_death(stage=0, count=round_no, timeout=30)
+                chaos.wait_respawn(stage=0, count=round_no, timeout=30)
+                assert chaos.wait_stage_full(eng.dispatcher, 0,
+                                             timeout=30) == 2
+        assert load.ok > 0
+    finally:
+        eng.shutdown()
+        sup.close()
+    kinds = [e["kind"] for e in sup.events]
+    assert kinds.count("death") >= 2 and kinds.count("respawn") >= 2
+    assert "degraded" not in kinds
+
+
+def test_respawn_budget_exhaustion_degrades_not_wedges():
+    """With a budget of 1, the second kill exhausts it: the supervisor
+    records a degrade, stops respawning (no storm), and the stage keeps
+    serving on its survivor — no wedge, no hang."""
+    g, params, eng, sup = _build(_cfg(respawn_budget=1, stable_s=3600.0))
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        x = np.random.default_rng(0).normal(size=(1, D)).astype(np.float32)
+        ref = np.asarray(g.apply(params, x))
+        chaos.kill(chaos.pick(stage=0))
+        chaos.wait_respawn(stage=0, timeout=30)
+        chaos.wait_stage_full(eng.dispatcher, 0, timeout=30)
+        chaos.kill(chaos.pick(stage=0))
+        chaos.wait_event("degraded", stage=0, timeout=30)
+        # degraded, not dead: the survivor answers
+        np.testing.assert_allclose(eng.submit(x).result(timeout=60), ref,
+                                   atol=1e-5)
+        live = [r for r in eng.dispatcher.stages[0].live_replicas()
+                if not r.retiring]
+        assert len(live) == 1
+        # no respawn storm after the degrade
+        time.sleep(2.0)
+        assert len(chaos.events("respawn", stage=0)) == 1
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_sigkill_during_spawn_fence(monkeypatch):
+    """The nastiest window: the replacement worker is killed right after
+    start(), while the membership fence that admits it is in flight.
+    The heal path must proxy the dead newcomer's fence share (scale()
+    un-wedges), and the NEXT respawn attempt restores the stage."""
+    g, params, eng, sup = _build(_cfg(spawn_timeout_s=15.0))
+    chaos = Chaos(sup)
+    kill_next = threading.Event()
+    orig_start = WorkerHandle.start
+
+    def start_then_die(self):
+        orig_start(self)
+        if kill_next.is_set():
+            kill_next.clear()
+            os.kill(self.proc.pid, signal.SIGKILL)
+
+    monkeypatch.setattr(WorkerHandle, "start", start_then_die)
+    try:
+        eng.start()
+        kill_next.set()     # arms for the NEXT spawn: the respawned worker
+        chaos.kill(chaos.pick(stage=0))
+        # two deaths: the original kill, then the fence-window kill
+        chaos.wait_death(stage=0, count=2, timeout=60)
+        assert chaos.wait_stage_full(eng.dispatcher, 0, timeout=60) == 2
+        x = np.random.default_rng(0).normal(size=(1, D)).astype(np.float32)
+        np.testing.assert_allclose(
+            eng.submit(x).result(timeout=60),
+            np.asarray(g.apply(params, x)), atol=1e-5)
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_slow_but_alive_worker_is_not_falsely_killed():
+    """A worker whose compute is dilated way past the heartbeat timeout
+    is SLOW, not DEAD: its heartbeat thread stays healthy, so failure
+    detection must not page — zero deaths, all futures resolve."""
+    g, params, eng, sup = _build(
+        _cfg(heartbeat_timeout_s=0.5, stall_timeout_s=None))
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        for h in chaos.workers(stage=0):
+            chaos.slow_compute(h, 0.8)      # >> heartbeat_timeout_s
+        xs = [np.random.default_rng(i).normal(size=(1, D))
+              .astype(np.float32) for i in range(6)]
+        outs = [eng.submit(x) for x in xs]
+        for x, f in zip(xs, outs):
+            np.testing.assert_allclose(
+                f.result(timeout=60),
+                np.asarray(g.apply(params, x)), atol=1e-5)
+        assert not chaos.events("death"), \
+            "slow-but-alive worker was falsely declared dead"
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_hung_compute_caught_by_stall_detection():
+    """The inverse failure mode: a wedged compute thread with a healthy
+    heartbeat.  Heartbeat-age detection can never fire; stall detection
+    (snapshot frozen + inbox backlog) must kill and heal it, failing the
+    wedged batches with NodeError and respawning the replica."""
+    g, params, eng, sup = _build(_cfg(stall_timeout_s=1.0))
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        victim = chaos.pick(stage=0)
+        chaos.hang_compute(victim)
+        with _Load(eng, clients=4):
+            death = chaos.wait_death(stage=0, timeout=60)[0]
+            assert "stalled" in death["why"]
+            chaos.wait_respawn(stage=0, timeout=60)
+            assert chaos.wait_stage_full(eng.dispatcher, 0,
+                                         timeout=60) == 2
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_severed_sockets_heal_like_a_crash():
+    """Cut a worker's data sockets mid-batch (flaky link, process still
+    alive): the routers heal exactly as for a crash, the monitor retires
+    the unreachable orphan and respawns it, and the chain keeps serving
+    throughout — no hang."""
+    g, params, eng, sup = _build(_cfg())
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        for h in chaos.workers(stage=0):
+            chaos.slow_compute(h, 0.05)
+        with _Load(eng) as load:
+            deadline = time.monotonic() + 20
+            while load.ok < 10 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            chaos.sever(chaos.pick(stage=0))
+            death = chaos.wait_death(stage=0, timeout=30)[0]
+            assert "severed" in death["why"]
+            chaos.wait_respawn(stage=0, timeout=30)
+            assert chaos.wait_stage_full(eng.dispatcher, 0,
+                                         timeout=30) == 2
+            # the chain kept serving across the whole failover
+            base = load.ok
+            deadline = time.monotonic() + 30
+            while load.ok < base + 10 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert load.ok >= base + 10, \
+                "chain stopped serving after a severed link"
+    finally:
+        eng.shutdown()
+        sup.close()

@@ -262,6 +262,59 @@ def test_dl303_passing_in_shaper(tmp_path):
     assert not [v for v in vs if v.rule == "DL303"]
 
 
+# -- DL304: unreaped child processes ------------------------------------------
+
+def test_dl304_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import subprocess
+
+        class Spawner:
+            def launch(self, cmd):
+                self.proc = subprocess.Popen(cmd)
+        """)
+    assert ("DL304", 5) in _rules_at(vs)
+
+
+def test_dl304_passing_twin_reaped_elsewhere(tmp_path):
+    # spawn in one method, reap in another — the check is global, like
+    # DL301's join accounting
+    vs = _lint_snippet(tmp_path, """\
+        import subprocess
+
+        class Spawner:
+            def launch(self, cmd):
+                self.proc = subprocess.Popen(cmd)
+
+            def close(self):
+                self.proc.terminate()
+                self.proc.wait()
+        """)
+    assert not [v for v in vs if v.rule == "DL304"]
+
+
+def test_dl304_multiprocessing_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import multiprocessing
+
+        def fork(fn):
+            worker = multiprocessing.Process(target=fn)
+            worker.start()
+            return worker
+        """)
+    assert ("DL304", 4) in _rules_at(vs)
+
+
+def test_dl304_passing_outside_runtime(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import subprocess
+
+        def launch(cmd):
+            proc = subprocess.Popen(cmd)
+            return proc
+        """, reldir="offline")
+    assert not [v for v in vs if v.rule == "DL304"]
+
+
 # -- DL401: unaudited broad except --------------------------------------------
 
 def test_dl401_violation(tmp_path):

@@ -375,10 +375,13 @@ def test_link_spec_parsing():
 # -- kill the socket: the chain survives a dead replica link ------------------
 
 def test_tcp_kill_fails_batch_chain_keeps_serving():
-    """Sever one replica's TCP inbox mid-serve: the batch routed onto the
-    dead link fails with NodeError, the router heals onto the sibling,
-    later requests succeed, and shutdown still joins every thread (the
-    router proxies the dead replica's fence/stop tokens downstream)."""
+    """Sever one replica's TCP inbox mid-serve: any batch already routed
+    onto the dead link fails with NodeError (never a hang, never a wrong
+    answer), the router heals onto the sibling — since ISSUE 7 it also
+    PROBES channel liveness, so a link severed while no send is in
+    flight is healed before another batch is risked on it — later
+    requests succeed, and shutdown still joins every thread (the router
+    proxies the dead replica's fence/stop tokens downstream)."""
     spec = TopologySpec.chain(mlp_graph(), 1,
                               transport="tcp").with_replicas(0, 2)
     g, params, eng = make_engine(spec, max_batch=1)
@@ -399,9 +402,10 @@ def test_tcp_kill_fails_batch_chain_keeps_serving():
             outcomes.append("ok")
         except NodeError:
             outcomes.append("failed")
-    # exactly the batches routed onto the dead link failed; the router
-    # healed, so traffic recovered and kept succeeding
-    assert "failed" in outcomes, outcomes
+    # only batches the router had already risked on the dead link may
+    # fail (at most the one in flight — liveness probing heals the
+    # member otherwise); traffic recovered and kept succeeding
+    assert outcomes.count("failed") <= 1, outcomes
     assert outcomes[-1] == "ok" and outcomes.count("ok") >= 4, outcomes
     # the dead replica self-retired off the live set
     deadline = time.monotonic() + 20

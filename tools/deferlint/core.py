@@ -138,7 +138,7 @@ def lint_paths(paths: Sequence[str]) -> List[Violation]:
     mods = collect_modules(paths)
     # checker modules register themselves on import
     from tools.deferlint import (  # noqa: F401
-        hygiene, locks, threads, tokens, wire_safety,
+        hygiene, locks, procs, threads, tokens, wire_safety,
     )
     out: List[Violation] = []
     for _name, fn in _CHECKERS:
@@ -154,6 +154,7 @@ RULE_CATALOG = {
     "DL301": "threading.Thread neither daemon=True nor joined in a shutdown path",
     "DL302": "blocking get()/recv() loop with no stop-token path, or unbounded join outside shutdown",
     "DL303": "time.sleep outside the LinkChannel rate shaper",
+    "DL304": "subprocess/multiprocessing child never reaped (no wait/terminate/kill on any shutdown path)",
     "DL401": "except Exception that neither re-raises, resolves a future/error envelope, nor carries a swallow tag",
     "DL501": "stop/fence singleton compared with ==/!= instead of is/is not",
 }

@@ -1,0 +1,82 @@
+"""DL304 — child-process discipline in runtime/.
+
+Every child process created in runtime/ (``subprocess.Popen(...)``,
+``multiprocessing.Process(...)``) must be reaped on some shutdown path:
+the handle it is assigned to must have ``.wait()``, ``.terminate()``, or
+``.kill()`` called on it somewhere in the linted set.  An unreaped child
+is worse than an unjoined thread — it survives the interpreter, eating a
+CPU (or holding sockets) until the machine is recycled, and its zombie
+entry pins the process table.
+
+Like DL301, the reap check is a *global* pass: the process may be spawned
+in one function (the supervisor's ``_spawn``) and reaped in another
+(``reap``/``close``) or even another module; what matters is that the
+assigned handle name is reaped somewhere.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from tools.deferlint.core import ModuleInfo, Violation, checker, iter_functions
+
+REAP_METHODS = ("wait", "terminate", "kill")
+
+
+def _is_proc_ctor(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        # subprocess.Popen(...) / multiprocessing.Process(...) /
+        # mp.Process(...) — module alias doesn't matter, the attr does
+        return f.attr in ("Popen", "Process")
+    if isinstance(f, ast.Name):
+        return f.id in ("Popen", "Process")
+    return False
+
+
+def _assigned_attr(fn: ast.AST, call: ast.Call) -> Optional[str]:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and node.value is call:
+            t = node.targets[0]
+            if isinstance(t, ast.Attribute):
+                return t.attr
+            if isinstance(t, ast.Name):
+                return t.id
+    return None
+
+
+@checker("process-discipline")
+def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    rt = [m for m in mods if m.in_runtime]
+    if not rt:
+        return
+
+    # global view: which handle names ever get wait()/terminate()/kill()?
+    reaped: Set[str] = set()
+    for mi in rt:
+        for node in ast.walk(mi.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in REAP_METHODS):
+                tgt = node.func.value
+                if isinstance(tgt, ast.Attribute):
+                    reaped.add(tgt.attr)
+                elif isinstance(tgt, ast.Name):
+                    reaped.add(tgt.id)
+
+    for mi in rt:
+        for qn, fn in iter_functions(mi.tree):
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Call)
+                        and _is_proc_ctor(node)):
+                    continue
+                target = _assigned_attr(fn, node)
+                if target is not None and target in reaped:
+                    continue
+                yield Violation(
+                    "DL304", mi.relpath, node.lineno,
+                    f"child process created in {qn} is never reaped — no "
+                    ".wait()/.terminate()/.kill() on its handle anywhere "
+                    "in runtime/ (orphan survives the interpreter)",
+                )
