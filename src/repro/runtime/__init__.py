@@ -3,7 +3,9 @@ from repro.runtime.controller import (Controller,  # noqa: F401
                                       decide_repartition, decide_scale,
                                       suggest_knobs)
 from repro.runtime.dispatcher import (AdmissionFull,  # noqa: F401
-                                      Dispatcher, DispatcherCodecs, NodeError)
+                                      DeadlineExceeded, Dispatcher,
+                                      DispatcherCodecs, NodeError,
+                                      ReplayStats, RetryPolicy)
 from repro.runtime.engine import EngineReport, InferenceEngine  # noqa: F401
 from repro.runtime.supervisor import (Supervisor,  # noqa: F401
                                       SupervisorConfig, supervised_engine)
@@ -16,4 +18,4 @@ from repro.runtime.transport import (Channel, ChannelClosed,  # noqa: F401
 from repro.runtime.wire import (BatchEnvelope, Envelope,  # noqa: F401
                                 NodePlan, ReconfigMarker, RowExtent,
                                 WireCodec, WireFormatError, WireRecord,
-                                frame, unframe)
+                                frame, unframe, unframe_compat)

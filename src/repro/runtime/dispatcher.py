@@ -32,6 +32,7 @@ responses; both are what the serving controller actuates.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import json
 import queue
 import threading
@@ -62,6 +63,72 @@ class AdmissionFull(Exception):
 class NodeError(RuntimeError):
     """A request's batch failed inside a compute node; carries the remote
     traceback.  The node survives and keeps serving other requests."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's end-to-end deadline (``submit(deadline_s=...)``) expired
+    before its result was released to the client.  The future fails with
+    this; any late result arriving afterwards is dropped by the collector's
+    at-most-once rule, never delivered."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Replay policy for infrastructure failures (the request-reliability
+    layer).  With a policy set, the dispatcher retains each in-flight
+    request's encoded input and re-admits requests stranded by a replica
+    crash / severed link / dead tail under an incremented ``attempt`` tag
+    — application errors raised by user ``apply`` code are NEVER retried.
+
+    ``max_attempts`` bounds TOTAL attempts (first admission included).
+    ``backoff_s`` delays re-admission by ``backoff_s * backoff_factor **
+    (attempt - 1)`` so a heal (respawn, rerouted link) has time to land.
+    ``retry_budget`` is a token bucket (capacity ``retry_budget`` tokens,
+    refilling at ``refill_per_s``): every replay spends one token, and
+    when the bucket is dry the dispatcher degrades gracefully back to the
+    PR 7 fail-fast semantics instead of amplifying a crash storm."""
+
+    max_attempts: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    retry_budget: float = 32.0
+    refill_per_s: float = 8.0
+
+
+@dataclasses.dataclass
+class ReplayStats:
+    """Counters for the reliability layer (windowless, monotonic)."""
+
+    replays: int = 0             # re-admissions actually scheduled
+    stale_failures: int = 0      # failure reports for a superseded attempt
+    budget_denied: int = 0       # replays refused: token bucket dry
+    attempts_exhausted: int = 0  # replays refused: max_attempts reached
+    deadline_denied: int = 0     # replays refused: not enough deadline left
+    deadlines_expired: int = 0   # futures failed with DeadlineExceeded
+    tail_revives: int = 0        # result channel rebuilt after a tail death
+
+
+class _Retained:
+    """Everything needed to re-admit one in-flight request: its encoded
+    input blob plus the admission metadata.  ``attempt`` is the attempt
+    currently in flight; a failure report carrying an older attempt is
+    stale and absorbed without action."""
+
+    __slots__ = ("blob", "client_id", "seq", "rows", "priority",
+                 "t_submit", "deadline", "deadline_s", "attempt")
+
+    def __init__(self, blob: bytes, client_id: Any, seq: int, rows: int,
+                 priority: int, t_submit: float,
+                 deadline: float | None, deadline_s: float | None):
+        self.blob = blob
+        self.client_id = client_id
+        self.seq = seq
+        self.rows = rows
+        self.priority = priority
+        self.t_submit = t_submit
+        self.deadline = deadline        # monotonic-clock expiry, or None
+        self.deadline_s = deadline_s    # original budget (error messages)
+        self.attempt = 0
 
 
 @dataclasses.dataclass
@@ -157,7 +224,8 @@ class Dispatcher:
                  client_quota: int | None = None,
                  shape_buckets: str = "exact",
                  max_batch_cap: int | None = None,
-                 replica_factory=None):
+                 replica_factory=None,
+                 retry_policy: RetryPolicy | None = None):
         if isinstance(topology, int):
             topology = TopologySpec.chain(graph, topology)
         topology.validate(graph)
@@ -231,6 +299,23 @@ class Dispatcher:
         self._admitting = 0        # registered but not yet on the admission q
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
+        # request-reliability layer: input retention + replay + deadlines.
+        # All timing here is MONOTONIC clock (deferlint DL103): deadlines
+        # and backoff must never jump with wall-clock adjustments.
+        self.retry_policy = retry_policy
+        self.replay_stats = ReplayStats()
+        self._retained: dict[int, _Retained] = {}
+        self._retry_tokens = (float(retry_policy.retry_budget)
+                              if retry_policy else 0.0)
+        self._retry_refill_t = time.monotonic()
+        # one timer thread services both event kinds off a heap of
+        # (due_monotonic, kind, rid, attempt); kind 0 = deadline expiry,
+        # kind 1 = backoff-delayed replay re-admission.  Started lazily on
+        # the first submit that needs it; joined by shutdown.
+        self._timer_heap: list[tuple[float, int, int, int]] = []
+        self._timer_cv = threading.Condition(self._lock)
+        self._reaper_thread: threading.Thread | None = None
+        self._reaper_stop = False
         self._pump_thread: threading.Thread | None = None
         self._collect_thread: threading.Thread | None = None
         self._configured = False
@@ -371,9 +456,14 @@ class Dispatcher:
                 return
             try:
                 head.send(env)
+            except (ChannelClosed, OSError):
+                # dead head link: an infrastructure failure — the replay
+                # layer may re-admit once the chain heals.  Keep pumping
+                # (mirrors the router's per-batch isolation).
+                self._finish_batch(env.extents, error=traceback.format_exc(),
+                                   retryable=True)
             except Exception:
-                # dead head link: fail exactly this request's futures and
-                # keep pumping (mirrors the router's per-batch isolation)
+                # anything else (encode/framing bug) is not healable
                 self._finish_batch(env.extents, error=traceback.format_exc())
 
     def _collect(self) -> None:
@@ -389,10 +479,14 @@ class Dispatcher:
             try:
                 item = self.result_channel.recv()
             except ChannelClosed:
-                # tail link dead: no result can ever arrive again — fail
-                # every unresolved future NOW (a silent return would hang
-                # every blocked client and shutdown's drain forever) and
-                # refuse new admissions
+                # tail link dead.  With a retry policy, rebuild the tail
+                # channel in place and replay what was in flight (the
+                # un-bricking path); without one, no result can ever
+                # arrive again — fail every unresolved future NOW (a
+                # silent return would hang every blocked client and
+                # shutdown's drain forever) and refuse new admissions
+                if self._try_revive_tail():
+                    continue
                 self._fail_all_pending(
                     "result channel closed: the chain's tail link died")
                 return
@@ -432,7 +526,8 @@ class Dispatcher:
                 continue
             env: BatchEnvelope = item
             if env.error is not None:
-                self._finish_batch(env.extents, error=env.error)
+                self._finish_batch(env.extents, error=env.error,
+                                   retryable=env.retryable)
                 continue
             try:
                 flat, _ = self.codecs.data.decode_tree(env.blob)
@@ -487,11 +582,15 @@ class Dispatcher:
 
     @staticmethod
     def _resolve(done: list[tuple]) -> None:
-        """Resolve released futures — called OUTSIDE the lock."""
+        """Resolve released futures — called OUTSIDE the lock.  First-wins
+        is structural: each rid's future is popped from ``_futures``
+        exactly once, so a second resolution attempt cannot reach here."""
         for fut, res, err in done:
             if err is not None:
-                fut.set_exception(NodeError(
-                    f"request failed inside the chain:\n{err}"))
+                exc = (err if isinstance(err, BaseException)
+                       else NodeError(
+                           f"request failed inside the chain:\n{err}"))
+                fut.set_exception(exc)
             else:
                 fut.set_result(res)
 
@@ -513,6 +612,9 @@ class Dispatcher:
             self._client_seq.clear()
             self._client_inflight.clear()
             self._inflight = 0
+            self._retained.clear()
+            self._timer_heap.clear()
+            self._timer_cv.notify_all()
             self._idle.notify_all()
         for fut in failed:
             try:
@@ -522,25 +624,225 @@ class Dispatcher:
 
     def _finish_batch(self, extents: list[RowExtent],
                       results: list | None = None,
-                      error: str | None = None) -> None:
+                      error: str | BaseException | None = None,
+                      retryable: bool = False) -> None:
         now = time.perf_counter()
         done: list[tuple] = []
         with self._lock:
             for idx, ext in enumerate(extents):
+                if (error is not None and retryable
+                        and self._absorb_failure_locked(ext)):
+                    continue            # replay scheduled (or stale report)
                 fut = self._futures.pop(ext.request_id, None)
                 if fut is None:
-                    continue
+                    continue            # at-most-once: already resolved
+                self._retained.pop(ext.request_id, None)
                 self._client_hold[ext.client_id][ext.seq] = (
                     fut, results[idx] if results is not None else None,
                     error, ext)
                 done.extend(self._release_locked(ext.client_id, now))
         self._resolve(done)
 
+    # -- request reliability: replay + deadlines --------------------------------
+    def _absorb_failure_locked(self, ext: RowExtent) -> bool:
+        """Decide one retryable failure's fate.  Caller holds ``_lock``.
+
+        True means the failure is absorbed — either a replay was scheduled
+        under an incremented attempt, or the report is stale (it names an
+        attempt the dispatcher already superseded).  False means replay is
+        refused (no policy, exhausted attempts, deadline too close, token
+        bucket dry, shutting down) and the caller fails the future — the
+        graceful degradation back to PR 7 fail-fast semantics."""
+        pol = self.retry_policy
+        if pol is None or self._closed or self._tail_dead:
+            return False
+        rec = self._retained.get(ext.request_id)
+        if rec is None:
+            return False
+        if ext.attempt != rec.attempt:
+            # a failure report for an earlier attempt of a request that
+            # was already re-admitted: the live attempt owns the outcome
+            self.replay_stats.stale_failures += 1
+            return True
+        if rec.attempt + 1 >= pol.max_attempts:
+            self.replay_stats.attempts_exhausted += 1
+            return False
+        backoff = pol.backoff_s * pol.backoff_factor ** rec.attempt
+        if rec.deadline is not None and (
+                time.monotonic() + backoff + self._latency_est_locked()
+                >= rec.deadline):
+            # not enough deadline budget left for another chain traversal:
+            # fail now rather than burn a token on a doomed replay
+            self.replay_stats.deadline_denied += 1
+            return False
+        if not self._take_retry_token_locked():
+            self.replay_stats.budget_denied += 1
+            return False
+        rec.attempt += 1
+        self.replay_stats.replays += 1
+        heapq.heappush(self._timer_heap,
+                       (time.monotonic() + backoff, 1,
+                        ext.request_id, rec.attempt))
+        self._ensure_reaper_locked()
+        self._timer_cv.notify()
+        return True
+
+    def _take_retry_token_locked(self) -> bool:
+        """Token bucket: one token per replay, refilled continuously."""
+        pol = self.retry_policy
+        now = time.monotonic()
+        self._retry_tokens = min(
+            float(pol.retry_budget),
+            self._retry_tokens + (now - self._retry_refill_t)
+            * pol.refill_per_s)
+        self._retry_refill_t = now
+        if self._retry_tokens < 1.0:
+            return False
+        self._retry_tokens -= 1.0
+        return True
+
+    def _latency_est_locked(self) -> float:
+        """Calibrated end-to-end chain latency (median of the stats
+        window) — the replay/deadline arbiter's cost model."""
+        if not self.latencies:
+            return 0.0
+        return float(np.median(self.latencies[-256:]))
+
+    def _ensure_reaper_locked(self) -> None:
+        if self._reaper_thread is None and not self._reaper_stop:
+            self._reaper_thread = threading.Thread(target=self._reaper,
+                                                   daemon=True)
+            self._reaper_thread.start()
+
+    def _reaper(self) -> None:
+        """Timer thread: fires deadline expiries and backoff-delayed
+        replays off the monotonic-clock heap.  One thread serves both so
+        ordering between a deadline and a replay of the same request is a
+        heap comparison, not a thread race."""
+        while True:
+            with self._lock:
+                while True:
+                    if self._reaper_stop:
+                        return
+                    if self._timer_heap:
+                        wait = self._timer_heap[0][0] - time.monotonic()
+                        if wait <= 0:
+                            break
+                        self._timer_cv.wait(timeout=wait)
+                    else:
+                        self._timer_cv.wait()
+                due, kind, rid, attempt = heapq.heappop(self._timer_heap)
+            if kind == 0:
+                self._expire_deadline(rid)
+            else:
+                self._replay_now(rid, attempt)
+
+    def _expire_deadline(self, rid: int) -> None:
+        """Fail one request with DeadlineExceeded — routed through the
+        sequenced merge (NOT a bare set_exception) so the client's seq
+        stream has no hole and later responses still release."""
+        with self._lock:
+            rec = self._retained.get(rid)
+            if rec is None or rid not in self._futures:
+                return                  # already resolved / cancelled
+            ext = RowExtent(rid, rec.client_id, rec.seq, rec.rows,
+                            t_submit=rec.t_submit, attempt=rec.attempt)
+            self.replay_stats.deadlines_expired += 1
+        self._finish_batch([ext], error=DeadlineExceeded(
+            f"request {rid} missed its {rec.deadline_s:.3g}s deadline; "
+            "any late result will be dropped, not delivered"))
+
+    def _replay_now(self, rid: int, attempt: int) -> None:
+        """Re-admit one stranded request through the NORMAL admission
+        path (FIFO-per-client and the sequenced merge hold: the request
+        keeps its original client_id/seq, only ``attempt`` moves)."""
+        with self._lock:
+            rec = self._retained.get(rid)
+            if rec is None or rid not in self._futures \
+                    or rec.attempt != attempt:
+                return                  # resolved or superseded meanwhile
+            if self._closed or self._tail_dead:
+                abandon = True
+            else:
+                abandon = False
+                # shutdown waits for _admitting == 0 before latching _STOP,
+                # so a replay mid-put cannot be overtaken by the stop token
+                self._admitting += 1
+        if abandon:
+            self._finish_batch([RowExtent(rid, rec.client_id, rec.seq,
+                                          rec.rows, t_submit=rec.t_submit,
+                                          attempt=rec.attempt)],
+                               error="replay abandoned: dispatcher "
+                                     "shutting down")
+            return
+        env = BatchEnvelope(
+            [RowExtent(rid, rec.client_id, rec.seq, rec.rows,
+                       t_submit=rec.t_submit, attempt=rec.attempt)],
+            rec.blob)
+        try:
+            self.admission.put(env, block=True, timeout=5.0,
+                               priority=rec.priority)
+        except queue.Full:
+            self._finish_batch(env.extents,
+                               error="replay re-admission refused "
+                                     "(admission queue full)")
+        finally:
+            with self._lock:
+                self._admitting -= 1
+                self._idle.notify_all()
+
+    def _try_revive_tail(self) -> bool:
+        """Un-brick a dead tail: open a fresh result channel, re-point the
+        last stage's replicas at it, and push every in-flight request back
+        through the replay arbiter.  Only with a retry policy — without
+        one the PR 7 fail-fast path (``_fail_all_pending``) stands."""
+        with self._lock:
+            if (self.retry_policy is None or self._closed
+                    or self._tail_dead):
+                return False
+            retained = [(rid, rec) for rid, rec in self._retained.items()
+                        if rid in self._futures]
+        old = self.result_channel
+        ch = self._open_channel(self.topology.stages[-1].transport, 0)
+        self.result_channel = ch
+        # replicas' relay loops re-read next_inbox per item, so the swap
+        # takes effect on their next send without restarting them
+        for node in self.stages[-1].replicas:
+            node.next_inbox = ch
+        try:
+            old.close()
+        except Exception:  # deferlint: swallow(old tail channel already dead)
+            pass
+        self.replay_stats.tail_revives += 1
+        if retained:
+            # everything in flight may have died with the old channel;
+            # replay it (first-wins drops any duplicate that did survive)
+            self._finish_batch(
+                [RowExtent(rid, rec.client_id, rec.seq, rec.rows,
+                           t_submit=rec.t_submit, attempt=rec.attempt)
+                 for rid, rec in retained],
+                error="the chain's tail link died before this request's "
+                      "result was delivered",
+                retryable=True)
+        return True
+
     # -- admission --------------------------------------------------------------
     def submit(self, x: np.ndarray, client_id: Any = 0,
                block: bool = True, timeout: float | None = None,
-               priority: int = 0) -> Future:
+               priority: int = 0,
+               deadline_s: float | None = None) -> Future:
         """Admit one request.  Returns a Future resolving to the output.
+
+        ``timeout`` vs ``deadline_s`` — they bound DIFFERENT phases:
+        ``timeout`` only bounds how long this call may block waiting for
+        admission-queue space (backpressure at the front door); once the
+        request is admitted, ``timeout`` plays no further role.
+        ``deadline_s`` is the end-to-end result deadline: if the future
+        has not resolved ``deadline_s`` seconds (monotonic clock) after
+        submission, it fails with :class:`DeadlineExceeded`, replay is
+        skipped when the remaining budget is below the calibrated chain
+        latency, and a late result is dropped by the at-most-once
+        collector, never delivered.
 
         When the bounded admission queue is full, blocks (``block=True``)
         or raises :class:`AdmissionFull` — that is the backpressure a
@@ -590,11 +892,28 @@ class Dispatcher:
             blob, rec = self.codecs.data.encode_tree(
                 {"": arr}, "data", request_id=rid, client_id=client_id)
             rows = int(arr.shape[0]) if arr.ndim else 1
+            t_sub = time.perf_counter()
             env = BatchEnvelope(
                 [RowExtent(rid, client_id, seq, rows,
-                           t_submit=time.perf_counter())], blob)
+                           t_submit=t_sub)], blob)
             with self._lock:
                 self.feed_records.append(rec)
+                if self.retry_policy is not None or deadline_s is not None:
+                    # retain the encoded input for replay; a deadline-only
+                    # submit (no policy) retains just the metadata the
+                    # reaper needs, not the blob
+                    ret = _Retained(
+                        blob if self.retry_policy is not None else b"",
+                        client_id, seq, rows, priority, t_sub,
+                        deadline=(time.monotonic() + deadline_s
+                                  if deadline_s is not None else None),
+                        deadline_s=deadline_s)
+                    self._retained[rid] = ret
+                    if ret.deadline is not None:
+                        heapq.heappush(self._timer_heap,
+                                       (ret.deadline, 0, rid, 0))
+                        self._ensure_reaper_locked()
+                        self._timer_cv.notify()
             self.admission.put(env, block=block, timeout=timeout,
                                priority=priority)
         except queue.Full:
@@ -616,6 +935,7 @@ class Dispatcher:
         it are released now (nothing else would ever re-drain them)."""
         with self._lock:
             self._futures.pop(rid, None)
+            self._retained.pop(rid, None)
             self._client_cancel[client_id].add(seq)
             self._inflight -= 1
             self._client_inflight[client_id] -= 1
@@ -904,6 +1224,13 @@ class Dispatcher:
                 node.join()
         if self._collect_thread:
             self._collect_thread.join()
+        # the reaper outlives the drain (it must be able to fail pending
+        # deadline/replay events during it); stop it after the collector
+        with self._lock:
+            self._reaper_stop = True
+            self._timer_cv.notify_all()
+        if self._reaper_thread:
+            self._reaper_thread.join()
         # every thread is down: release the channels (sockets, link
         # clocks) and return them to their transports' live counts
         for ch in self._channels:

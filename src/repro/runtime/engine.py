@@ -56,7 +56,8 @@ from repro.core.metrics import (EDGE, HardwareProfile, LatencySummary,
                                 network_energy_j)
 from repro.core.partitioner import LinkModel
 from repro.runtime.controller import Controller, ControllerConfig
-from repro.runtime.dispatcher import Dispatcher, DispatcherCodecs
+from repro.runtime.dispatcher import (Dispatcher, DispatcherCodecs,
+                                      RetryPolicy)
 from repro.runtime.topology import TopologySpec
 from repro.runtime.wire import CHUNK_BYTES
 
@@ -95,7 +96,8 @@ class InferenceEngine:
                  shape_buckets: str = "exact",
                  max_batch_cap: int | None = None,
                  controller: ControllerConfig | None = None,
-                 replica_factory=None):
+                 replica_factory=None,
+                 retry_policy: RetryPolicy | None = None):
         """``topology`` is the serving shape: a
         :class:`~repro.runtime.topology.TopologySpec`, or an int ``n`` as
         shorthand for ``TopologySpec.chain(graph, n)`` (the paper's
@@ -114,7 +116,8 @@ class InferenceEngine:
                                      client_quota=client_quota,
                                      shape_buckets=shape_buckets,
                                      max_batch_cap=max_batch_cap,
-                                     replica_factory=replica_factory)
+                                     replica_factory=replica_factory,
+                                     retry_policy=retry_policy)
         # the serving-time feedback loop (opt-in): calibrate costs online,
         # repartition / scale behind an epoch fence, adapt batching knobs
         self.controller = (Controller(self.dispatcher, controller)
@@ -143,12 +146,18 @@ class InferenceEngine:
     # -- async serving path ---------------------------------------------------
     def submit(self, x: np.ndarray, client_id: Any = 0,
                block: bool = True, timeout: float | None = None,
-               priority: int = 0) -> Future:
+               priority: int = 0,
+               deadline_s: float | None = None) -> Future:
         """Admit one request; backpressure per Dispatcher.submit().
-        ``priority`` weights the admission dequeue (band weight
-        ``priority + 1``) — see :meth:`Dispatcher.submit`."""
+        ``timeout`` bounds admission-queue blocking ONLY; ``deadline_s``
+        is the end-to-end result deadline (the future fails with
+        :class:`~repro.runtime.dispatcher.DeadlineExceeded` when it
+        expires, and late results are dropped).  ``priority`` weights the
+        admission dequeue (band weight ``priority + 1``) — see
+        :meth:`Dispatcher.submit`."""
         return self.dispatcher.submit(x, client_id=client_id, block=block,
-                                      timeout=timeout, priority=priority)
+                                      timeout=timeout, priority=priority,
+                                      deadline_s=deadline_s)
 
     def stream(self, inputs: Iterable[np.ndarray], client_id: Any = 0,
                timeout: float | None = None) -> Iterator[np.ndarray]:

@@ -231,9 +231,10 @@ class StageGroup:
         tally = FenceTally(self.upstream_members())
         held: list[BatchEnvelope] = []
 
-        def fail_extents(extents, why: str) -> None:
+        def fail_extents(extents, why: str,
+                         retryable: bool = False) -> None:
             if self.fail_batch is not None:
-                self.fail_batch(extents, error=why)
+                self.fail_batch(extents, error=why, retryable=retryable)
 
         def fail_stranded(m: ComputeNode) -> None:
             """Fail the batches stranded in a dead link's buffers: the
@@ -261,11 +262,16 @@ class StageGroup:
                 entries = list(dq)[-k:]
             for entry in entries:
                 if entry is not None:
+                    # a dead link/replica is an infrastructure failure:
+                    # the reliability layer may replay through the healed
+                    # routing set (spurious failures resolve to no-ops at
+                    # the collector's at-most-once merge)
                     fail_extents(
                         entry,
                         f"stage {self.index} replica {m.replica}: inbox "
                         "link died with this batch in flight "
-                        "(undeliverable)")
+                        "(undeliverable)",
+                        retryable=True)
 
         def settle_tokens(m: ComputeNode) -> None:
             """Proxy the control tokens a dead member was SENT but never
@@ -386,9 +392,13 @@ class StageGroup:
                 except (ChannelClosed, OSError):
                     pass                # downstream gone too: nothing owed
 
-        def fail(env: BatchEnvelope) -> None:
+        def fail(env: BatchEnvelope, exc: BaseException) -> None:
             import traceback
-            fail_extents(env.extents, traceback.format_exc())
+            # link-shaped routing failures are retryable (the set heals,
+            # a respawn lands); anything else — e.g. a payload the framing
+            # refuses — would fail identically on every attempt
+            fail_extents(env.extents, traceback.format_exc(),
+                         retryable=isinstance(exc, (ChannelClosed, OSError)))
 
         while True:
             try:
@@ -402,7 +412,8 @@ class StageGroup:
                     fail_extents(
                         env.extents,
                         f"stage {self.index}: input link died with this "
-                        "batch held at an epoch fence (undeliverable)")
+                        "batch held at an epoch fence (undeliverable)",
+                        retryable=True)
                 broadcast(_STOP)
                 return
             if item is _STOP:
@@ -457,8 +468,8 @@ class StageGroup:
                     for env in ready:
                         try:
                             route(env)
-                        except Exception:
-                            fail(env)
+                        except Exception as exc:
+                            fail(env, exc)
                 if tally.stopped:
                     # shutdown raced an in-flight drain fence: the last
                     # live stop arrived BEFORE this barrier lowered the
@@ -473,7 +484,7 @@ class StageGroup:
                 continue                    # the barrier
             try:
                 route(env)
-            except Exception:
+            except Exception as exc:
                 # fail exactly this batch's futures and keep routing —
                 # a dying router would silently hang every client
-                fail(env)
+                fail(env, exc)

@@ -129,6 +129,11 @@ class RowExtent:
     # bucket: the ORIGINAL middle-axis sizes (everything between axis 0
     # and the last axis) the collector trims results back to
     pad_trim: tuple | None = None
+    # delivery attempt (0 = first admission).  The dispatcher's replay
+    # path re-admits a request stranded by an infrastructure failure
+    # under an incremented attempt so stale failure reports for an older
+    # attempt can be told apart from the one currently in flight.
+    attempt: int = 0
 
 
 @dataclasses.dataclass
@@ -142,6 +147,13 @@ class BatchEnvelope:
     extents: list[RowExtent]
     blob: bytes
     error: str | None = None
+    # failure classification for error envelopes: True means the failure
+    # is an INFRASTRUCTURE one (severed link, killed replica, stranded
+    # ledger) so the affected requests are safe to replay through the
+    # healed chain; False (the default, and the only value application /
+    # codec errors ever carry) means user code rejected the request and
+    # retrying would just repeat the rejection.
+    retryable: bool = False
     # partition epoch the producing stage was on when it encoded this
     # envelope.  With replicated stages the chain is no longer one global
     # FIFO: a fast replica can emit post-fence output while a slow sibling
@@ -412,9 +424,14 @@ def _checked(blob: bytes, off: int, n: int, what: str) -> int:
 
 FRAME_MAGIC = b"DW"
 # v2 added the control-plane frame type (_F_CONTROL: heartbeats, worker
-# config/knob/bye messages); readers reject any other version outright, so
-# a v1 peer meets a clean WireFormatError instead of a silent misparse
-FRAME_VERSION = 2
+# config/knob/bye messages); v3 added the reliability fields (a u32
+# `attempt` tag on every extent header and a `retryable` flags byte on
+# envelopes) for the dispatcher's replay path.  Readers reject any other
+# version outright, so an old peer meets a clean WireFormatError instead
+# of a silent misparse; :func:`unframe_compat` keeps the v2 decode path
+# alive for mixed-version tests and tooling.
+FRAME_VERSION = 3
+_COMPAT_VERSIONS = (2, FRAME_VERSION)
 
 _F_ENVELOPE = 1
 _F_MARKER = 2
@@ -478,18 +495,33 @@ def _pack_bytes(b: bytes) -> bytes:
     return struct.pack("<I", len(b)) + b
 
 
-def _pack_extent(e: RowExtent) -> bytes:
+def _pack_extent(e: RowExtent, version: int = FRAME_VERSION) -> bytes:
     cid = _pack_obj(e.client_id)
     trim = (struct.pack("<i", -1) if e.pad_trim is None
             else struct.pack(f"<i{len(e.pad_trim)}q", len(e.pad_trim),
                              *e.pad_trim))
-    return (struct.pack("<qqqd", e.request_id, e.seq, e.rows, e.t_submit)
-            + _pack_bytes(cid) + trim)
+    if version >= 3:
+        head = struct.pack("<qqqdI", e.request_id, e.seq, e.rows,
+                           e.t_submit, e.attempt)
+    else:
+        if e.attempt:
+            raise WireFormatError(
+                f"attempt={e.attempt} is not representable in wire "
+                f"v{version} (replay needs v3)")
+        head = struct.pack("<qqqd", e.request_id, e.seq, e.rows, e.t_submit)
+    return head + _pack_bytes(cid) + trim
 
 
-def _unpack_extent(blob: bytes, off: int) -> tuple[RowExtent, int]:
-    off = _checked(blob, off, 32, "extent header")
-    rid, seq, rows, t_submit = struct.unpack_from("<qqqd", blob, off - 32)
+def _unpack_extent(blob: bytes, off: int,
+                   version: int = FRAME_VERSION) -> tuple[RowExtent, int]:
+    attempt = 0
+    if version >= 3:
+        off = _checked(blob, off, 36, "extent header")
+        rid, seq, rows, t_submit, attempt = struct.unpack_from(
+            "<qqqdI", blob, off - 36)
+    else:
+        off = _checked(blob, off, 32, "extent header")
+        rid, seq, rows, t_submit = struct.unpack_from("<qqqd", blob, off - 32)
     off = _checked(blob, off, 4, "extent client id length")
     (ln,) = struct.unpack_from("<I", blob, off - 4)
     off = _checked(blob, off, ln, "extent client id")
@@ -505,7 +537,7 @@ def _unpack_extent(blob: bytes, off: int) -> tuple[RowExtent, int]:
         off = _checked(blob, off, 8 * nt, "extent pad_trim values")
         trim = struct.unpack_from(f"<{nt}q", blob, off - 8 * nt)
     return RowExtent(rid, cid, seq, rows, t_submit=t_submit,
-                     pad_trim=trim), off
+                     pad_trim=trim, attempt=attempt), off
 
 
 def _codec_fields(c: "WireCodec") -> bytes:
@@ -522,13 +554,21 @@ def _codec_from_fields(blob: bytes) -> "WireCodec":
                      vectorized=f[3])
 
 
-def frame(item: Any) -> bytes:
+def frame(item: Any, version: int = FRAME_VERSION) -> bytes:
     """Serialize one channel item to the versioned byte wire (no pickle).
     Accepts exactly what the runtime puts on channels: a
     :class:`BatchEnvelope`, a :class:`ReconfigMarker` (with its
-    :class:`NodePlan` payloads), or the ``_STOP``/``_RETIRE`` tokens."""
+    :class:`NodePlan` payloads), or the ``_STOP``/``_RETIRE`` tokens.
+    ``version`` selects the wire revision to speak (current by default;
+    v2 is kept for compat tests and refuses items that carry the v3-only
+    reliability fields)."""
+    if version not in _COMPAT_VERSIONS:
+        raise WireFormatError(
+            f"cannot speak frame version {version} "
+            f"(supported: {_COMPAT_VERSIONS})")
+
     def head(ftype: int) -> bytes:
-        return FRAME_MAGIC + struct.pack("<BB", FRAME_VERSION, ftype)
+        return FRAME_MAGIC + struct.pack("<BB", version, ftype)
 
     if item is _STOP:
         return head(_F_STOP)
@@ -537,9 +577,17 @@ def frame(item: Any) -> bytes:
     if isinstance(item, BatchEnvelope):
         err = (struct.pack("<I", _NONE_U32) if item.error is None
                else _pack_bytes(item.error.encode()))
-        return (head(_F_ENVELOPE) + struct.pack("<q", item.epoch) + err
-                + struct.pack("<I", len(item.extents))
-                + b"".join(_pack_extent(e) for e in item.extents)
+        if version >= 3:
+            flags = struct.pack("<B", 1 if item.retryable else 0)
+        elif item.retryable:
+            raise WireFormatError(
+                "retryable envelopes are not representable in wire "
+                f"v{version} (replay needs v3)")
+        else:
+            flags = b""
+        return (head(_F_ENVELOPE) + struct.pack("<q", item.epoch) + flags
+                + err + struct.pack("<I", len(item.extents))
+                + b"".join(_pack_extent(e, version) for e in item.extents)
                 + struct.pack("<Q", len(item.blob)) + item.blob)
     if isinstance(item, ReconfigMarker):
         parts = [head(_F_MARKER), struct.pack("<q", item.epoch),
@@ -560,9 +608,17 @@ def frame(item: Any) -> bytes:
         "BatchEnvelope, ReconfigMarker, or a control token)")
 
 
-def _unframe_envelope(blob: bytes, off: int) -> BatchEnvelope:
+def _unframe_envelope(blob: bytes, off: int,
+                      version: int = FRAME_VERSION) -> BatchEnvelope:
     off = _checked(blob, off, 8, "envelope epoch")
     (epoch,) = struct.unpack_from("<q", blob, off - 8)
+    retryable = False
+    if version >= 3:
+        off = _checked(blob, off, 1, "envelope flags")
+        flags = blob[off - 1]
+        if flags > 1:
+            raise WireFormatError(f"corrupt envelope flags {flags:#x}")
+        retryable = bool(flags)
     off = _checked(blob, off, 4, "envelope error length")
     (el,) = struct.unpack_from("<I", blob, off - 4)
     error = None
@@ -573,14 +629,16 @@ def _unframe_envelope(blob: bytes, off: int) -> BatchEnvelope:
         except UnicodeDecodeError as e:
             raise WireFormatError(f"corrupt envelope error text: {e}") from e
     off = _checked(blob, off, 4, "envelope extent count")
+    # min extent: the fixed header (36B in v3, 32B in v2) + 2 u32s
+    min_extent = (36 if version >= 3 else 32) + 8
     (n,) = struct.unpack_from("<I", blob, off - 4)
-    if n > (len(blob) - off) // 40:      # min extent: 32B header + 2 u32s
+    if n > (len(blob) - off) // min_extent:
         raise WireFormatError(
             f"corrupt envelope: {n} extents cannot fit in "
             f"{len(blob) - off} bytes")
     extents = []
     for _ in range(n):
-        e, off = _unpack_extent(blob, off)
+        e, off = _unpack_extent(blob, off, version)
         extents.append(e)
     off = _checked(blob, off, 8, "envelope blob length")
     (lb,) = struct.unpack_from("<Q", blob, off - 8)
@@ -589,7 +647,7 @@ def _unframe_envelope(blob: bytes, off: int) -> BatchEnvelope:
         raise WireFormatError(
             f"corrupt envelope: {len(blob) - off} trailing bytes")
     return BatchEnvelope(extents, blob[off - lb:off], error=error,
-                         epoch=epoch)
+                         retryable=retryable, epoch=epoch)
 
 
 def _unframe_marker(blob: bytes, off: int) -> ReconfigMarker:
@@ -647,18 +705,13 @@ def _unframe_control(blob: bytes, off: int) -> ControlFrame:
     return ControlFrame(kind, payload)
 
 
-def unframe(blob: bytes) -> Any:
-    """Parse one framed channel item.  Every read is bounds-checked; any
-    malformation — short buffer, bad magic, unknown version or type,
-    lengths past the end, trailing bytes — raises
-    :class:`WireFormatError`.  Control tokens come back as the SAME
-    singletons the in-process runtime identity-compares against."""
+def _unframe_versions(blob: bytes, versions: tuple[int, ...]) -> Any:
     try:
         _checked(blob, 0, 4, "frame header")
         if blob[:2] != FRAME_MAGIC:
             raise WireFormatError(f"bad frame magic {blob[:2]!r}")
         version, ftype = struct.unpack_from("<BB", blob, 2)
-        if version != FRAME_VERSION:
+        if version not in versions:
             raise WireFormatError(
                 f"unsupported frame version {version} "
                 f"(speaking {FRAME_VERSION})")
@@ -667,7 +720,7 @@ def unframe(blob: bytes) -> Any:
         if ftype == _F_RETIRE:
             return _RETIRE
         if ftype == _F_ENVELOPE:
-            return _unframe_envelope(blob, 4)
+            return _unframe_envelope(blob, 4, version)
         if ftype == _F_MARKER:
             return _unframe_marker(blob, 4)
         if ftype == _F_CONTROL:
@@ -677,6 +730,26 @@ def unframe(blob: bytes) -> Any:
         raise
     except Exception as e:      # any residual parse error is a wire fault
         raise WireFormatError(f"corrupt frame: {e}") from e
+
+
+def unframe(blob: bytes) -> Any:
+    """Parse one framed channel item.  Every read is bounds-checked; any
+    malformation — short buffer, bad magic, unknown version or type,
+    lengths past the end, trailing bytes — raises
+    :class:`WireFormatError`.  Control tokens come back as the SAME
+    singletons the in-process runtime identity-compares against.  Only
+    the CURRENT wire version is accepted (the runtime assumes every peer
+    speaks it); :func:`unframe_compat` additionally accepts v2 frames."""
+    return _unframe_versions(blob, (FRAME_VERSION,))
+
+
+def unframe_compat(blob: bytes) -> Any:
+    """Like :func:`unframe` but accepts every supported wire revision
+    (currently v2 and v3).  v2 extents come back with ``attempt=0`` and
+    v2 envelopes with ``retryable=False`` — exactly the semantics a v2
+    speaker meant.  For tooling and rolling-upgrade tests; the serving
+    hot path stays strict."""
+    return _unframe_versions(blob, _COMPAT_VERSIONS)
 
 
 def tree_unflatten_paths(flat: dict[str, np.ndarray]) -> dict:

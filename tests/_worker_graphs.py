@@ -16,6 +16,43 @@ from repro.core.graph import LayerGraph
 D = 16
 
 
+POISON = 777.0
+
+
+def poison_graph(depth: int = 4, d: int = D) -> LayerGraph:
+    """mlp_graph plus a tripwire: an input whose first element is
+    :data:`POISON` makes the first layer raise — a deterministic
+    APPLICATION error (user ``apply`` code), which the reliability layer
+    must surface after exactly one attempt, never replay."""
+    shape = (1, d)
+    g = LayerGraph("poison-mlp", jax.ShapeDtypeStruct(shape, np.float32))
+
+    def check(x_host):
+        # host-side tripwire (the stage apply is jitted, so the
+        # data-dependent raise must escape the trace via a callback);
+        # raises identically on every attempt — nothing a retry can heal
+        if np.any(np.asarray(x_host) == POISON):
+            raise ValueError("poison pill: application error from apply()")
+        return np.asarray(x_host)
+
+    def trip(p, x):
+        x = jax.pure_callback(
+            check, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return jnp.tanh(x @ p["w"])
+
+    prev = ""
+    for i in range(depth):
+        g.layer(f"fc{i}",
+                trip if i == 0
+                else (lambda p, x: jnp.tanh(x @ p["w"])),
+                {"w": jax.ShapeDtypeStruct((d, d), np.float32)},
+                (prev,),
+                jax.ShapeDtypeStruct(shape, np.float32),
+                flops=2.0 * d * d)
+        prev = f"fc{i}"
+    return g
+
+
 def mlp_graph(depth: int = 6, d: int = D) -> LayerGraph:
     """The toy tanh MLP the runtime tests standardize on — deterministic,
     so the supervisor-side and worker-side copies agree layer for layer."""

@@ -18,11 +18,12 @@ import numpy as np
 import pytest
 
 from repro.runtime import NodeError, TopologySpec
-from repro.runtime.dispatcher import DispatcherCodecs
+from repro.runtime.dispatcher import (DeadlineExceeded, DispatcherCodecs,
+                                      RetryPolicy)
 from repro.runtime.supervisor import (SupervisorConfig, WorkerHandle,
                                       supervised_engine)
 from repro.runtime.wire import WireCodec
-from tests._worker_graphs import mlp_graph
+from tests._worker_graphs import POISON, mlp_graph, poison_graph
 from tools.chaos import Chaos
 
 pytestmark = pytest.mark.slow
@@ -44,8 +45,8 @@ def _cfg(**kw):
     return SupervisorConfig(**kw)
 
 
-def _build(cfg, replicas=2, **engine_kw):
-    g = mlp_graph()
+def _build(cfg, replicas=2, graph=mlp_graph, **engine_kw):
+    g = graph()
     params = g.init(jax.random.PRNGKey(0))
     topo = TopologySpec.chain(g, 2).with_replicas(0, replicas)
     engine_kw.setdefault("codecs", RAW)
@@ -59,9 +60,10 @@ class _Load:
     Every future must resolve — with a value or a NodeError; anything
     else (timeout, foreign exception) is a hang/contract violation."""
 
-    def __init__(self, eng, clients=4, timeout=60.0):
+    def __init__(self, eng, clients=4, timeout=60.0, ref=None):
         self.eng = eng
         self.timeout = timeout
+        self.ref = ref          # optional x -> expected output (numerics)
         self.ok = 0
         self.failed = 0
         self.violations: list[str] = []
@@ -86,7 +88,14 @@ class _Load:
                 .astype(np.float32)
             f = self.eng.submit(x, client_id=f"c{cid}")
             try:
-                f.result(timeout=self.timeout)
+                out = f.result(timeout=self.timeout)
+                if self.ref is not None and not np.allclose(
+                        out, self.ref(x), atol=1e-5):
+                    with self._lock:
+                        self.violations.append(
+                            f"numerically wrong output for client {cid} "
+                            f"request {i}")
+                    return
                 with self._lock:
                     self.ok += 1
             except NodeError:
@@ -279,6 +288,157 @@ def test_hung_compute_caught_by_stall_detection():
             chaos.wait_respawn(stage=0, timeout=60)
             assert chaos.wait_stage_full(eng.dispatcher, 0,
                                          timeout=60) == 2
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_kill_with_replay_zero_client_visible_failures():
+    """THE replay contract: SIGKILL one of two stage-0 workers mid-batch
+    under closed-loop load WITH a retry policy — every submitted future
+    resolves with a numerically correct output.  Zero NodeErrors reach a
+    client (the stranded batches are re-admitted through the healed
+    routing set), zero hangs, and the replay counters show it actually
+    happened rather than the kill landing between batches."""
+    g, params, eng, sup = _build(
+        _cfg(), retry_policy=RetryPolicy(max_attempts=5, backoff_s=0.05,
+                                         retry_budget=64.0,
+                                         refill_per_s=32.0))
+    chaos = Chaos(sup)
+    ref = lambda x: np.asarray(g.apply(params, x))   # noqa: E731
+    try:
+        eng.start()
+        chaos.slow_stage(0, 0.05)   # dwell in compute: kill lands mid-batch
+        with _Load(eng, ref=ref) as load:
+            deadline = time.monotonic() + 20
+            while load.ok < 20 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert load.ok >= 20, "load never ramped"
+            chaos.kill(chaos.pick(stage=0))
+            chaos.wait_death(stage=0, timeout=30)
+            chaos.wait_respawn(stage=0, timeout=30)
+            assert chaos.wait_stage_full(eng.dispatcher, 0,
+                                         timeout=30) == 2
+            # keep serving across the heal so replayed work interleaves
+            # with fresh admissions
+            base = load.ok
+            deadline = time.monotonic() + 30
+            while load.ok < base + 10 and time.monotonic() < deadline:
+                time.sleep(0.02)
+        assert load.failed == 0, \
+            f"{load.failed} client-visible failures despite replay"
+        st = eng.dispatcher.replay_stats
+        assert st.replays >= 1, "kill landed between batches: no replay " \
+            f"exercised ({st})"
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_application_error_is_not_retried():
+    """A poison input makes user apply() raise — an APPLICATION error.
+    With a generous retry policy the future must still fail with
+    NodeError after exactly one attempt (zero replays): retrying
+    deterministic user errors would burn budget and double-charge
+    side-effecting layers."""
+    g, params, eng, sup = _build(
+        _cfg(graph_factory=GRAPHS + ":poison_graph"), graph=poison_graph,
+        retry_policy=RetryPolicy(max_attempts=5, retry_budget=64.0))
+    try:
+        eng.start()
+        x = np.random.default_rng(0).normal(size=(1, D)).astype(np.float32)
+        ref = np.asarray(g.apply(params, x))
+        np.testing.assert_allclose(eng.submit(x).result(timeout=60), ref,
+                                   atol=1e-5)
+        bad = x.copy()
+        bad[0, 0] = POISON
+        with pytest.raises(NodeError, match="poison pill"):
+            eng.submit(bad).result(timeout=60)
+        st = eng.dispatcher.replay_stats
+        assert st.replays == 0, \
+            f"application error was replayed ({st})"
+        # the chain is unharmed: clean requests still serve
+        np.testing.assert_allclose(eng.submit(x).result(timeout=60), ref,
+                                   atol=1e-5)
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_retry_budget_exhaustion_degrades_to_fail_fast():
+    """A zero-token bucket (budget 0, no refill) means every would-be
+    replay is refused: the kill behaves exactly like PR 7 fail-fast —
+    stranded futures fail with NodeError, nothing hangs, and the denial
+    is visible in the counters.  This is the crash-storm valve: when
+    replays can't be afforded, the layer degrades instead of amplifying
+    load."""
+    g, params, eng, sup = _build(
+        _cfg(), retry_policy=RetryPolicy(max_attempts=5, retry_budget=0.0,
+                                         refill_per_s=0.0))
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        chaos.slow_stage(0, 0.05)
+        with _Load(eng) as load:
+            deadline = time.monotonic() + 20
+            while load.ok < 10 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            assert load.ok >= 10, "load never ramped"
+            chaos.kill(chaos.pick(stage=0))
+            chaos.wait_death(stage=0, timeout=30)
+            chaos.wait_respawn(stage=0, timeout=30)
+            assert chaos.wait_stage_full(eng.dispatcher, 0,
+                                         timeout=30) == 2
+        # _Load.stop() (in __exit__) already asserted zero hangs; the
+        # kill's stranded batches surfaced as NodeError because the
+        # bucket refused their replay
+        st = eng.dispatcher.replay_stats
+        assert st.budget_denied >= 1, f"no replay was ever denied ({st})"
+        assert st.replays == 0, f"replay happened on a dry bucket ({st})"
+        assert load.failed >= 1, "kill landed between batches: " \
+            "fail-fast degradation not exercised"
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_deadline_expires_on_hung_worker_in_bounded_time():
+    """Wedge EVERY stage-0 worker (healthy heartbeats, nothing to route
+    around) and submit with a deadline: the future must fail with
+    DeadlineExceeded in bounded time — the reaper's monotonic clock, not
+    stall detection, is what unblocks the client.  Stall detection is
+    configured slower than the deadline so the heal demonstrably loses
+    the race; it then recovers the stage for a clean shutdown."""
+    g, params, eng, sup = _build(_cfg(stall_timeout_s=2.0))
+    chaos = Chaos(sup)
+    try:
+        eng.start()
+        x = np.random.default_rng(0).normal(size=(1, D)).astype(np.float32)
+        ref = np.asarray(g.apply(params, x))
+        # warm the chain so the hang catches a steady state
+        np.testing.assert_allclose(eng.submit(x).result(timeout=60), ref,
+                                   atol=1e-5)
+        assert chaos.hang_stage(0) == 2
+        t0 = time.monotonic()
+        # two requests: lqd spreads them across both wedged workers
+        futs = [eng.submit(x, client_id=c, deadline_s=0.5)
+                for c in ("da", "db")]
+        for fut in futs:
+            with pytest.raises(DeadlineExceeded):
+                fut.result(timeout=30)
+        took = time.monotonic() - t0
+        assert took < 10.0, f"deadline took {took:.1f}s to fire"
+        assert eng.dispatcher.replay_stats.deadlines_expired >= 2
+        # let stall detection heal the wedged stage before teardown —
+        # closed-loop load builds the inbox backlog stall detection keys
+        # on (their stranded futures legally fail with NodeError)
+        with _Load(eng):
+            chaos.wait_death(stage=0, count=2, timeout=60)
+            chaos.wait_respawn(stage=0, count=2, timeout=60)
+            assert chaos.wait_stage_full(eng.dispatcher, 0,
+                                         timeout=60) == 2
+        np.testing.assert_allclose(eng.submit(x).result(timeout=60), ref,
+                                   atol=1e-5)
     finally:
         eng.shutdown()
         sup.close()

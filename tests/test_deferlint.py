@@ -81,6 +81,41 @@ def test_dl102_passing_outside_runtime(tmp_path):
     assert not [v for v in vs if v.rule == "DL102"]
 
 
+# -- DL103: wall clock banned in runtime/ -------------------------------------
+
+def test_dl103_violation(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import time
+
+        def expired(deadline):
+            return time.time() >= deadline
+        """)
+    assert ("DL103", 4) in _rules_at(vs)
+
+
+def test_dl103_passing_twin(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import time
+
+        def expired(deadline):
+            return time.monotonic() >= deadline
+
+        def fine_timing():
+            return time.perf_counter()
+        """)
+    assert not [v for v in vs if v.rule == "DL103"]
+
+
+def test_dl103_passing_outside_runtime(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        import time
+
+        def stamp():
+            return time.time()
+        """, reldir="offline")
+    assert not [v for v in vs if v.rule == "DL103"]
+
+
 # -- DL201: lock-order cycle --------------------------------------------------
 
 def test_dl201_violation(tmp_path):

@@ -328,3 +328,72 @@ def test_unstaged_mode_parity():
     # per-request wire: one encode per request, not per bucket
     tr = [t for n in eng.dispatcher.nodes for t in n.traces if t.n]
     assert all(t.encodes == t.n for t in tr if t.encodes)
+
+
+# -- per-request deadlines (the reliability layer's reaper) -------------------
+
+def slow_mlp_graph(delay_s: float = 0.4, d: int = D) -> LayerGraph:
+    """One-layer MLP whose compute dwells ``delay_s`` on the host (via a
+    callback, so the dwell survives jit) — deterministic loser of any
+    race against a sub-dwell deadline."""
+    g = LayerGraph("slow-mlp", jax.ShapeDtypeStruct((1, d), np.float32))
+
+    def nap(xh):
+        time.sleep(delay_s)
+        return np.asarray(xh)
+
+    def fn(p, x):
+        x = jax.pure_callback(nap, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return jnp.tanh(x @ p["w"])
+
+    g.layer("fc0", fn, {"w": jax.ShapeDtypeStruct((d, d), np.float32)},
+            ("",), jax.ShapeDtypeStruct((1, d), np.float32),
+            flops=2.0 * d * d)
+    return g
+
+
+def test_deadline_expires_before_slow_result_late_result_dropped():
+    """A 0.05s deadline against a 0.4s compute: the future fails with
+    DeadlineExceeded well before the result exists, the late result is
+    dropped by the at-most-once merge (never delivered), retention is
+    cleaned up, and the chain keeps serving."""
+    from repro.runtime.dispatcher import DeadlineExceeded
+    g = slow_mlp_graph()
+    params = g.init(jax.random.PRNGKey(0))
+    eng = InferenceEngine(g, 1, RAW, max_batch=1)
+    eng.configure(params)
+    eng.start()
+    # warm: compile outside the timed window
+    eng.submit(sample(0)).result(timeout=60)
+
+    t0 = time.monotonic()
+    fut = eng.submit(sample(1), deadline_s=0.05)
+    with pytest.raises(DeadlineExceeded, match="0.05"):
+        fut.result(timeout=30)
+    took = time.monotonic() - t0
+    assert took < 5.0, f"deadline fired after {took:.2f}s, not ~0.05s"
+    assert eng.dispatcher.replay_stats.deadlines_expired == 1
+    # the late result resolves to a no-op; the NEXT submit still works
+    # and retention holds no ghost of the expired request
+    ref = np.asarray(g.apply(params, jnp.asarray(sample(2))))
+    np.testing.assert_allclose(eng.submit(sample(2)).result(timeout=60),
+                               ref, atol=1e-5)
+    assert not eng.dispatcher._retained
+    eng.shutdown()
+
+
+def test_deadline_met_resolves_normally_and_cleans_retention():
+    """A generous deadline never fires: the result arrives, the timer
+    event resolves to a no-op, and the retained entry is dropped on
+    delivery, not on expiry."""
+    g = mlp_graph()
+    params = g.init(jax.random.PRNGKey(0))
+    eng = InferenceEngine(g, 2, RAW, max_batch=2)
+    eng.configure(params)
+    eng.start()
+    ref = np.asarray(g.apply(params, jnp.asarray(sample(3))))
+    out = eng.submit(sample(3), deadline_s=60.0).result(timeout=60)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    assert eng.dispatcher.replay_stats.deadlines_expired == 0
+    assert not eng.dispatcher._retained
+    eng.shutdown()

@@ -42,13 +42,14 @@ def _cfg(**kw):
 
 # -- ControlFrame on the wire -------------------------------------------------
 
-def test_control_frame_roundtrip_is_version_2():
+def test_control_frame_roundtrip_is_version_3():
     cf = ControlFrame("hb", {"snapshot": {"n": 3, "compute_s": 0.5,
                                           "nested": [1, (2, 3), None]}})
     blob = frame(cf)
-    # the control frame type is what bumped the wire to v2: a v1 speaker
-    # must reject it loudly instead of misparsing
-    assert blob[2] == FRAME_VERSION == 2
+    # control frames bumped the wire to v2; the reliability fields
+    # (extent `attempt` + envelope `retryable`) bumped it to v3 — an
+    # older speaker must reject the frame loudly instead of misparsing
+    assert blob[2] == FRAME_VERSION == 3
     back = unframe(blob)
     assert isinstance(back, ControlFrame)
     assert back.kind == "hb"

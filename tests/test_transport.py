@@ -88,7 +88,8 @@ def shutdown_or_fail(eng, timeout=60.0):
 
 def test_frame_roundtrip_envelope():
     env = BatchEnvelope(
-        [RowExtent(7, ("bg", 3), 2, 4, t_submit=1.25, pad_trim=(3, 5)),
+        [RowExtent(7, ("bg", 3), 2, 4, t_submit=1.25, pad_trim=(3, 5),
+                   attempt=2),
          RowExtent(8, "client-x", 0, 1),
          RowExtent(9, 0, 1, 2)],
         b"\x00\x01payload\xff", epoch=3)
@@ -98,11 +99,16 @@ def test_frame_roundtrip_envelope():
     assert isinstance(r.extents[0].client_id, tuple)    # hashable again
     assert r.extents[0].pad_trim == (3, 5)
     assert r.extents[0].t_submit == 1.25                # exact (f64)
+    assert r.extents[0].attempt == 2                    # replay tag rides
     assert r.extents[1].client_id == "client-x"
     assert r.extents[1].pad_trim is None
+    assert r.extents[1].attempt == 0
+    assert r.retryable is False
     err = unframe(frame(BatchEnvelope([RowExtent(1, 0, 0, 1)], b"",
-                                      error="trace\nback ü", epoch=1)))
+                                      error="trace\nback ü", epoch=1,
+                                      retryable=True)))
     assert err.error == "trace\nback ü" and err.blob == b""
+    assert err.retryable is True                # classification rides too
 
 
 def test_frame_roundtrip_tokens_and_marker():
@@ -139,8 +145,12 @@ def test_unframe_truncation_is_always_wireformaterror():
 
 def test_unframe_corruption_fuzz():
     """Flipped bytes either parse (flip landed in the payload) or raise
-    WireFormatError — never a bare struct.error/ValueError/KeyError."""
-    blob = frame(envelope(3, cid=("a", 1), blob=b"b" * 64))
+    WireFormatError — never a bare struct.error/ValueError/KeyError.  The
+    seed carries the v3 reliability fields so flips land in the attempt
+    header and the flags byte too."""
+    blob = frame(BatchEnvelope(
+        [RowExtent(3, ("a", 1), 3, 1, t_submit=0.25, attempt=1)],
+        b"b" * 64, error="boom", retryable=True))
     rng = np.random.default_rng(0)
     for _ in range(300):
         b = bytearray(blob)
@@ -150,6 +160,34 @@ def test_unframe_corruption_fuzz():
             unframe(bytes(b))
         except WireFormatError:
             pass
+
+
+def test_old_frame_version_rejected_by_name_compat_path_decodes():
+    """FRAME_VERSION bumped to 3 (attempt + retryable): a v2 frame is
+    refused by the strict decoder with an error NAMING the versions, the
+    explicit compat path still decodes it (reliability fields at their
+    v2 defaults), and v3-only field values refuse to frame as v2 rather
+    than silently dropping the replay tag."""
+    from repro.runtime.wire import FRAME_VERSION, unframe_compat
+    assert FRAME_VERSION == 3
+    env = BatchEnvelope([RowExtent(7, "c", 2, 4, t_submit=1.25)],
+                        b"payload", epoch=2)
+    old = frame(env, version=2)
+    with pytest.raises(WireFormatError, match=r"version 2.*speaking 3"):
+        unframe(old)
+    r = unframe_compat(old)
+    assert r.blob == b"payload" and r.extents[0].request_id == 7
+    assert r.extents[0].attempt == 0 and r.retryable is False
+    # current frames flow through the compat path too
+    r3 = unframe_compat(frame(env))
+    assert r3.extents[0].t_submit == 1.25
+    # v3-only values are not representable in v2
+    with pytest.raises(WireFormatError, match="attempt"):
+        frame(BatchEnvelope([RowExtent(1, 0, 0, 1, attempt=1)], b""),
+              version=2)
+    with pytest.raises(WireFormatError, match="retryable"):
+        frame(BatchEnvelope([RowExtent(1, 0, 0, 1)], b"", error="e",
+                            retryable=True), version=2)
 
 
 # -- decode_tree / decode_array: untrusted blobs ------------------------------
@@ -504,6 +542,84 @@ def test_tcp_dead_midchain_link_fails_pending_not_hangs():
     while not eng.dispatcher._tail_dead and time.monotonic() < deadline:
         time.sleep(0.02)
     assert eng.dispatcher._tail_dead
+    with pytest.raises(RuntimeError, match="no longer deliver"):
+        eng.submit(sample(50))
+    shutdown_or_fail(eng)
+
+
+def _generous_policy():
+    from repro.runtime.dispatcher import RetryPolicy
+    return RetryPolicy(max_attempts=5, backoff_s=0.02,
+                       retry_budget=64.0, refill_per_s=32.0)
+
+
+def test_tcp_kill_with_retry_policy_zero_failures():
+    """The same dead-link drill as above, with a retry policy: stranded
+    batches are re-admitted through the healed routing set instead of
+    failing — EVERY future resolves with the correct result, no client
+    ever sees a NodeError."""
+    spec = TopologySpec.chain(mlp_graph(), 1,
+                              transport="tcp").with_replicas(0, 2)
+    g, params, eng = make_engine(spec, max_batch=1, queue_depth=4,
+                                 retry_policy=_generous_policy())
+    eng.start()
+    for i in range(4):                          # both replicas warm
+        eng.submit(sample(i)).result(timeout=60)
+
+    futs = [(20 + i, eng.submit(sample(20 + i), client_id=i % 3))
+            for i in range(16)]
+    eng.dispatcher.stages[0].replicas[1].inbox.kill()
+    for i, f in futs:       # no try/except: a NodeError IS the failure
+        ref = np.asarray(g.apply(params, jnp.asarray(sample(i))))
+        np.testing.assert_allclose(f.result(timeout=60), ref, atol=1e-5)
+    # the healed chain serves fresh traffic on the survivor
+    eng.submit(sample(99)).result(timeout=60)
+    shutdown_or_fail(eng)
+
+
+def test_tcp_dead_tail_revives_and_replays_with_retry_policy():
+    """The un-bricking path: severing the result channel used to poison
+    the dispatcher forever (_tail_dead, 'restart the engine').  With a
+    retry policy the collector rebuilds the tail channel in place,
+    replays what was in flight, and keeps accepting submits — zero
+    client-visible failures."""
+    spec = TopologySpec.chain(mlp_graph(), 1, transport="tcp")
+    g, params, eng = make_engine(spec, max_batch=1,
+                                 retry_policy=_generous_policy())
+    eng.start()
+    eng.submit(sample(0)).result(timeout=60)
+
+    futs = [(1 + i, eng.submit(sample(1 + i))) for i in range(4)]
+    eng.dispatcher.result_channel.kill()
+    for i, f in futs:
+        ref = np.asarray(g.apply(params, jnp.asarray(sample(i))))
+        np.testing.assert_allclose(f.result(timeout=60), ref, atol=1e-5)
+    assert eng.dispatcher.replay_stats.tail_revives >= 1
+    assert not eng.dispatcher._tail_dead
+    # new submits are NOT refused — the engine needed no restart
+    eng.submit(sample(50)).result(timeout=60)
+    shutdown_or_fail(eng)
+
+
+def test_tcp_dead_tail_still_fails_fast_without_policy():
+    """Replay OFF must preserve the PR 7 contract byte-for-byte: this is
+    test_tcp_dead_tail_fails_pending_not_hangs re-asserted next to its
+    replay twin so the two semantics are diffable side by side."""
+    spec = TopologySpec.chain(mlp_graph(), 1, transport="tcp")
+    g, params, eng = make_engine(spec, max_batch=1)
+    eng.start()
+    eng.submit(sample(0)).result(timeout=60)
+    fut = eng.submit(sample(1))
+    eng.dispatcher.result_channel.kill()
+    try:
+        fut.result(timeout=30)
+    except NodeError:
+        pass
+    deadline = time.monotonic() + 20
+    while not eng.dispatcher._tail_dead and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert eng.dispatcher._tail_dead
+    assert eng.dispatcher.replay_stats.tail_revives == 0
     with pytest.raises(RuntimeError, match="no longer deliver"):
         eng.submit(sample(50))
     shutdown_or_fail(eng)

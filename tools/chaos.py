@@ -74,6 +74,22 @@ class Chaos:
             ControlFrame("chaos", {"action": "slow_compute",
                                    "delay_s": delay_s}), required=True)
 
+    def hang_stage(self, stage: int) -> int:
+        """Wedge EVERY live worker of one stage (no healthy sibling to
+        route around — the deadline drills need the whole stage dark).
+        Returns how many workers were hung."""
+        victims = self.workers(stage)
+        for h in victims:
+            self.hang_compute(h)
+        return len(victims)
+
+    def slow_stage(self, stage: int, delay_s: float = 0.05) -> int:
+        """Dilate every live worker of one stage (kills land mid-batch)."""
+        victims = self.workers(stage)
+        for h in victims:
+            self.slow_compute(h, delay_s)
+        return len(victims)
+
     def sever(self, handle) -> None:
         """Cut the worker's data sockets mid-batch, process left running:
         a dead link, not a dead device.  The routers see a dead channel

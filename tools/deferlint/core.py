@@ -150,6 +150,7 @@ def lint_paths(paths: Sequence[str]) -> List[Violation]:
 RULE_CATALOG = {
     "DL101": "struct.unpack/unpack_from not behind wire._checked (allowlist: core/codecs.py internals only)",
     "DL102": "pickle/marshal import or eval/exec call inside runtime/",
+    "DL103": "time.time() inside runtime/ (deadlines/backoff must use time.monotonic or perf_counter)",
     "DL201": "cycle in the static lock-acquisition graph across runtime/",
     "DL301": "threading.Thread neither daemon=True nor joined in a shutdown path",
     "DL302": "blocking get()/recv() loop with no stop-token path, or unbounded join outside shutdown",

@@ -1,4 +1,4 @@
-"""DL101/DL102 — wire-safety.
+"""DL101/DL102/DL103 — wire-safety.
 
 DL101: every ``struct.unpack`` / ``struct.unpack_from`` must be preceded,
 lexically within the same function, by a call to the ``_checked`` bounds
@@ -14,6 +14,14 @@ every decode error into ``WireFormatError``.
 DL102: ``pickle``/``marshal`` imports and ``eval``/``exec`` calls are
 banned in ``runtime/`` — nothing on the wire path may deserialize
 arbitrary objects or execute strings.
+
+DL103: ``time.time()`` is banned in ``runtime/`` — deadlines, backoff,
+heartbeat ages, and every other duration the runtime computes must use
+``time.monotonic()`` (or ``time.perf_counter()`` for fine timing): a
+wall-clock step (NTP slew, manual set, DST on a naive host) must never
+expire a deadline early or freeze a backoff.  Wall-clock timestamps for
+logs/audit trails belong OUTSIDE ``runtime/`` (the supervisor's event
+log uses monotonic ages; benchmark emitters live in ``benchmarks/``).
 """
 
 from __future__ import annotations
@@ -122,4 +130,13 @@ def _check_banned(mi: ModuleInfo) -> Iterable[Violation]:
                 yield Violation(
                     "DL102", mi.relpath, node.lineno,
                     f"{f.id}() call in runtime/",
+                )
+            elif (isinstance(f, ast.Attribute) and f.attr == "time"
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "time"):
+                yield Violation(
+                    "DL103", mi.relpath, node.lineno,
+                    "time.time() in runtime/ — wall clock jumps break "
+                    "deadlines/backoff; use time.monotonic() (or "
+                    "time.perf_counter() for fine timing)",
                 )
