@@ -6,8 +6,11 @@ vs the PR 1 byte-at-a-time reference) and the ZFP transform coder (batched
 (4,4,B)-layout lift vs the per-axis copying reference) on three payload
 classes the wire actually carries: incompressible random bytes, a real ZFP
 activation stream (what ZFP/LZ4 compresses in the chain), and tiled
-repetitive data.  Exits nonzero if the vectorized path loses to the
-baseline beyond tolerance.
+repetitive data.  Also measures the wire codec's small-payload bypass on
+a one-token decode-step frame (ISSUE 9): raw magic-prefixed .npy vs the
+full serializer/LZ4 path, where the setup cost dominates at a few hundred
+bytes.  Exits nonzero if the vectorized path loses to the baseline beyond
+tolerance.
 
     PYTHONPATH=src python benchmarks/codec_microbench.py --min-speedup 1.0
 """
@@ -54,6 +57,24 @@ def run(reps: int = 3) -> list[dict]:
     rows.append({"codec": "lz4_decompress", "payload": "tiled",
                  "mb": len(payloads["tiled"]) / 1e6, "ref_mb_s": ref,
                  "vec_mb_s": vec, "speedup": vec / ref})
+
+    # the decode-step fast path: a one-token activation frame is a few
+    # hundred bytes, where ZFP/LZ4 setup cost dwarfs any transfer saving —
+    # the size-threshold bypass ships it as magic-prefixed raw .npy.
+    # ref = the full codec path on the same frame, vec = the bypass.
+    from repro.runtime.wire import WireCodec
+    step = rng.normal(size=(1, 1, 128)).astype(np.float32)
+    for ser, comp in (("zfp", "lz4"), ("q8", "none")):
+        full = WireCodec(ser, comp, zfp_rate=16)
+        fast = WireCodec(ser, comp, zfp_rate=16, small_bypass=4096)
+        np.testing.assert_array_equal(
+            fast.decode_array(fast.encode_array(step)), step)
+        ref = _mbs(lambda: full.encode_array(step), step.nbytes, reps * 100)
+        vec = _mbs(lambda: fast.encode_array(step), step.nbytes, reps * 100)
+        rows.append({"codec": f"small_bypass[{ser}_{comp}]",
+                     "payload": "token_step_512B",
+                     "mb": step.nbytes / 1e6, "ref_mb_s": ref,
+                     "vec_mb_s": vec, "speedup": vec / ref})
 
     ref_zfp = codecs.ZfpCodec(rate=16, vectorized=False)
     vec_zfp = codecs.ZfpCodec(rate=16)

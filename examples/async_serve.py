@@ -107,7 +107,7 @@ def client(c: int, out: dict) -> None:
         # the sequenced merge guarantees it even across the replicated
         # stage; the admission timeout turns overload into AdmissionFull
         out[c] = [int(np.argmax(y))
-                  for y in engine.stream(xs, client_id=c, timeout=60.0)]
+                  for y in engine.submit_stream(xs, client_id=c, timeout=60.0)]
     except AdmissionFull:
         out[c] = "shed"       # a real front-end would retry with backoff
 

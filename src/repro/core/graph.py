@@ -39,6 +39,26 @@ def tree_params(tree: Any) -> int:
 
 
 @dataclasses.dataclass
+class LayerDecode:
+    """Autoregressive view of a stateful layer (attention with a KV cache).
+
+    ``prefill_fn(params, x)`` runs the layer over a full prompt
+    ``[B, S, ...]`` and returns ``(y, cache)`` — the cache pytree holds
+    everything the layer needs to continue from position ``S`` (e.g.
+    K/V buffers of fixed capacity plus a slot-position vector), with a
+    leading batch axis so per-session caches (``B=1``) stack into one
+    decode batch.  ``step_fn(params, cache, x, pos)`` consumes ONE new
+    token per row (``x: [B, 1, ...]``, ``pos: [B] int32`` — rows may sit
+    at *different* sequence positions) and returns ``(y, new_cache)``.
+    Both must be jit-traceable; cache leaves must keep a fixed shape so a
+    stacked decode batch specializes once per batch size, not per step.
+    """
+
+    prefill_fn: Callable[..., Any]         # (params, x) -> (y, cache)
+    step_fn: Callable[..., Any]            # (params, cache, x, pos) -> (y, new_cache)
+
+
+@dataclasses.dataclass
 class LayerNode:
     """One layer (or fused block) in the model DAG."""
 
@@ -56,6 +76,9 @@ class LayerNode:
     # pooling with edge effects) must set False — a serving segment
     # containing any pad-unsafe layer falls back to exact bucketing.
     pad_safe: bool = True
+    # stateful autoregressive view; None for stateless layers, whose ``fn``
+    # already works one token at a time (embeddings, norms, token-wise MLP)
+    decode: LayerDecode | None = None
 
     @property
     def param_bytes(self) -> int:
@@ -94,11 +117,21 @@ class LayerGraph:
         return node.name
 
     def layer(self, name: str, fn, param_spec, inputs, out_spec, flops,
-              pad_safe: bool = True, **meta):
+              pad_safe: bool = True, decode: LayerDecode | None = None,
+              **meta):
         return self.add(
             LayerNode(name, fn, param_spec, tuple(inputs), out_spec, flops,
-                      meta, pad_safe=pad_safe)
+                      meta, pad_safe=pad_safe, decode=decode)
         )
+
+    @property
+    def decode_capable(self) -> bool:
+        """True iff the graph declares an autoregressive view: at least one
+        stateful :class:`LayerDecode` node AND a pure chain shape (every
+        node consumes exactly one producer), so any contiguous partition
+        has a single boundary activation for token-step frames to carry."""
+        return (any(n.decode is not None for n in self.nodes)
+                and all(len(n.inputs) == 1 for n in self.nodes))
 
     def __len__(self) -> int:
         return len(self.nodes)

@@ -266,7 +266,8 @@ class Dispatcher:
                         for r in range(spec.replicas)]
             group = StageGroup(i, spec, replicas, self._stage_inputs[i],
                                upstream=self.stages[i - 1] if i else None,
-                               fail_batch=self._finish_batch)
+                               fail_batch=self._finish_batch,
+                               note_displaced=self._note_displaced)
             self.stages.append(group)
         for i, group in enumerate(self.stages):
             nxt = (self._stage_inputs[i + 1] if i + 1 < len(self.stages)
@@ -335,6 +336,14 @@ class Dispatcher:
         # degenerate downstream consumer of the last stage, sharing the
         # routers' FenceTally accounting
         self._tail = FenceTally(len(self.stages[-1].replicas))
+        # decode-session bookkeeping: active session ids (registered by the
+        # generate loop, unregistered on close — the per-client-GC
+        # precedent, so ephemeral sessions can't grow this without bound)
+        # and the displaced set (sessions whose sticky replica was drained
+        # or died; the generate loop pops its id and re-prefills before the
+        # next step instead of burning a step on a guaranteed SessionLost)
+        self._active_sessions: set = set()
+        self._displaced_sessions: set = set()
 
     def _open_channel(self, transport: str, capacity: int) -> Channel:
         ch = get_transport(transport).channel(capacity)
@@ -353,7 +362,8 @@ class Dispatcher:
             staged=d["staged"],
             shape_buckets=spec.shape_buckets or d["shape_buckets"],
             max_batch_cap=spec.max_batch_cap or d["max_batch_cap"],
-            inbox=self._open_channel(spec.transport, d["queue_depth"]))
+            inbox=self._open_channel(spec.transport, d["queue_depth"]),
+            session_capacity=spec.session_capacity or 64)
         if spec.coalesce_s is not None:
             node.coalesce_s = spec.coalesce_s
         return node
@@ -657,7 +667,9 @@ class Dispatcher:
         if pol is None or self._closed or self._tail_dead:
             return False
         rec = self._retained.get(ext.request_id)
-        if rec is None:
+        if rec is None or not rec.blob:
+            # nothing retained to replay (deadline-only metadata, or a
+            # session step whose recovery belongs to the session layer)
             return False
         if ext.attempt != rec.attempt:
             # a failure report for an earlier attempt of a request that
@@ -826,11 +838,43 @@ class Dispatcher:
                 retryable=True)
         return True
 
+    # -- decode sessions --------------------------------------------------------
+    def session_register(self, session: Any) -> None:
+        """Track one active decode session (the generate loop calls this
+        at open and :meth:`session_unregister` on close, so the displaced
+        set only ever holds live sessions — bounded by construction)."""
+        with self._lock:
+            self._active_sessions.add(session)
+
+    def session_unregister(self, session: Any) -> None:
+        with self._lock:
+            self._active_sessions.discard(session)
+            self._displaced_sessions.discard(session)
+
+    def session_displaced(self, session: Any) -> bool:
+        """Check-and-clear: True once after the session's sticky replica
+        was drained/died or a repartition invalidated every stage's cache
+        — the generate loop then re-prefills from its retained history."""
+        with self._lock:
+            if session in self._displaced_sessions:
+                self._displaced_sessions.discard(session)
+                return True
+            return False
+
+    def _note_displaced(self, sessions: Iterable[Any]) -> None:
+        """Router callback: these sessions' pinned replica left the
+        routing set (drain at a fence, or death)."""
+        with self._lock:
+            self._displaced_sessions.update(
+                s for s in sessions if s in self._active_sessions)
+
     # -- admission --------------------------------------------------------------
     def submit(self, x: np.ndarray, client_id: Any = 0,
                block: bool = True, timeout: float | None = None,
                priority: int = 0,
-               deadline_s: float | None = None) -> Future:
+               deadline_s: float | None = None,
+               session: Any = None, session_pos: int = 0,
+               session_kind: int = 0) -> Future:
         """Admit one request.  Returns a Future resolving to the output.
 
         ``timeout`` vs ``deadline_s`` — they bound DIFFERENT phases:
@@ -857,12 +901,22 @@ class Dispatcher:
         priority 0.  A client's responses are still released in its own
         submission order (the sequenced merge), whatever the priorities
         or replica completion order did to the in-chain ordering.
+
+        ``session``/``session_pos``/``session_kind`` tag decode-session
+        traffic (see :mod:`repro.runtime.session`): stage routers pin the
+        session to the replica holding its KV cache, and the blind replay
+        layer is bypassed — a replayed decode step against a cache that
+        died with its replica would silently corrupt the sequence, so
+        session recovery is re-prefill from retained history at the
+        session layer, never a wire-level replay.
         """
         if not self._started:
             self.start()
         # reject ids the byte framing can't carry HERE, not as a relay
         # failure mid-chain on whichever stage binds a socket transport
         validate_client_id(client_id)
+        if session is not None:
+            validate_client_id(session)
         fut: Future = Future()
         # one locked section registers the request: any submit that passed
         # the closed check is visible to shutdown() via _admitting/_inflight,
@@ -895,15 +949,20 @@ class Dispatcher:
             t_sub = time.perf_counter()
             env = BatchEnvelope(
                 [RowExtent(rid, client_id, seq, rows,
-                           t_submit=t_sub)], blob)
+                           t_submit=t_sub, session=session,
+                           pos=int(session_pos),
+                           kind=int(session_kind))], blob)
             with self._lock:
                 self.feed_records.append(rec)
-                if self.retry_policy is not None or deadline_s is not None:
+                if ((self.retry_policy is not None and session is None)
+                        or deadline_s is not None):
                     # retain the encoded input for replay; a deadline-only
-                    # submit (no policy) retains just the metadata the
-                    # reaper needs, not the blob
+                    # submit (no policy) — and ANY session-tagged submit,
+                    # whose recovery is session-layer re-prefill — retains
+                    # just the metadata the reaper needs, not the blob
                     ret = _Retained(
-                        blob if self.retry_policy is not None else b"",
+                        blob if (self.retry_policy is not None
+                                 and session is None) else b"",
                         client_id, seq, rows, priority, t_sub,
                         deadline=(time.monotonic() + deadline_s
                                   if deadline_s is not None else None),
@@ -1034,6 +1093,12 @@ class Dispatcher:
             self._stage_inputs[0].send(ReconfigMarker(epoch, plans))
             acked = ev.wait(timeout)
             self._reconfig_event = None
+            # a repartition invalidates per-stage KV caches (they are keyed
+            # by the stage's layer slice, which just moved): every active
+            # decode session is displaced — the generate loop re-prefills
+            # from its retained history, so sessions survive the move
+            with self._lock:
+                self._displaced_sessions.update(self._active_sessions)
             self.topology = self.topology.with_layers(new_bounds)
             self.partition = partition(self.graph, len(self.stages),
                                        link=self.link, cuts=new_bounds[1:-1],

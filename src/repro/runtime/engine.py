@@ -5,10 +5,13 @@ declare the serving shape as a :class:`~repro.runtime.topology.TopologySpec`
 (stages x replicas x transports — or pass an int for the classic
 one-replica chain), build the engine from a layer graph, then either
 
-* ``submit(x, client_id)`` / ``stream(xs, client_id)`` — the async serving
-  path: many clients admit requests concurrently, compute replicas batch
-  them continuously, results come back as futures (FIFO per client — the
-  collector's sequenced merge holds replica-reordered completions), or
+* ``submit(x, client_id)`` / ``submit_stream(xs, client_id)`` — the async
+  serving path: many clients admit requests concurrently, compute replicas
+  batch them continuously, results come back as futures (FIFO per client —
+  the collector's sequenced merge holds replica-reordered completions),
+* ``generate(prompt, max_new_tokens)`` — autoregressive decode serving:
+  one session's tokens stream back as they exit the tail, with per-stage
+  KV caches resident on the replicas (see :mod:`repro.runtime.session`), or
 * ``run(xs)`` — the original blocking single-stream call, now a shim over
   submit().
 
@@ -45,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from concurrent.futures import Future
 from typing import Any, Iterable, Iterator
 
@@ -58,6 +62,7 @@ from repro.core.partitioner import LinkModel
 from repro.runtime.controller import Controller, ControllerConfig
 from repro.runtime.dispatcher import (Dispatcher, DispatcherCodecs,
                                       RetryPolicy)
+from repro.runtime.session import generate_tokens
 from repro.runtime.topology import TopologySpec
 from repro.runtime.wire import CHUNK_BYTES
 
@@ -159,9 +164,13 @@ class InferenceEngine:
                                       timeout=timeout, priority=priority,
                                       deadline_s=deadline_s)
 
-    def stream(self, inputs: Iterable[np.ndarray], client_id: Any = 0,
-               timeout: float | None = None) -> Iterator[np.ndarray]:
-        """Admit a client's stream; yield results in submission order.
+    def submit_stream(self, inputs: Iterable[np.ndarray], client_id: Any = 0,
+                      timeout: float | None = None) -> Iterator[np.ndarray]:
+        """Admit a client's stream of INDEPENDENT inputs; yield one result
+        per input, in submission order.  (Formerly ``stream()`` — renamed
+        so the request-stream sugar cannot be confused with
+        :meth:`generate`'s token stream, which yields the TOKENS of one
+        autoregressive session.)
 
         Admission of sample i+1 overlaps compute of sample i — the yield
         order (this client's FIFO) is guaranteed twice over: futures are
@@ -176,6 +185,43 @@ class InferenceEngine:
                                        timeout=timeout))
         for fut in pending:
             yield fut.result()
+
+    def stream(self, inputs: Iterable[np.ndarray], client_id: Any = 0,
+               timeout: float | None = None) -> Iterator[np.ndarray]:
+        """Deprecated alias for :meth:`submit_stream` (one result per
+        independent input).  For token streaming of one autoregressive
+        session, use :meth:`generate`."""
+        warnings.warn(
+            "InferenceEngine.stream() is now submit_stream() (one result "
+            "per independent input); for autoregressive token streaming "
+            "use generate()", DeprecationWarning, stacklevel=2)
+        return self.submit_stream(inputs, client_id=client_id,
+                                  timeout=timeout)
+
+    # -- autoregressive decode serving ----------------------------------------
+    def generate(self, prompt, max_new_tokens: int, *,
+                 session_id: str | None = None,
+                 client_id: Any = None,
+                 restart: str = "auto",
+                 deadline_s: float | None = None,
+                 step_timeout: float | None = 60.0) -> Iterator[int]:
+        """Greedy-decode one session through the chain, yielding each token
+        as it exits the tail.
+
+        The prompt is prefilled ONCE (per-stage KV caches stay resident on
+        the replicas that computed them, routed sticky); each subsequent
+        step ships only the newest token per hop.  Loss of residency —
+        replica death, drain at a scale fence, repartition, LRU eviction —
+        is recovered by re-prefilling the retained history when ``restart``
+        permits ('always', or 'auto' with a retry policy set), else the
+        iterator raises :class:`~repro.runtime.session.SessionLost`
+        (``retryable=False``).  Greedy decode is deterministic, so a
+        recovered session's tokens are bit-identical to an undisturbed
+        run.  See :func:`repro.runtime.session.generate_tokens`."""
+        return generate_tokens(
+            self.dispatcher, prompt, max_new_tokens,
+            session_id=session_id, client_id=client_id, restart=restart,
+            deadline_s=deadline_s, step_timeout=step_timeout)
 
     # -- elastic membership ----------------------------------------------------
     def scale(self, stage: int, replicas: int,

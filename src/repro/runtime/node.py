@@ -51,6 +51,7 @@ import jax
 import numpy as np
 
 from repro.core.graph import LayerGraph, LayerNode
+from repro.runtime.session import SessionStore
 from repro.runtime.transport import Channel, ChannelClosed, InprocChannel
 # _STOP / _RETIRE live in wire.py so the byte framing can map them to
 # dedicated frame types (a socket transport must carry them too); they are
@@ -60,9 +61,10 @@ from repro.runtime.transport import Channel, ChannelClosed, InprocChannel
 # so everything already in its queues completes and relays — but the
 # egress exits WITHOUT forwarding it downstream, so the next stage's
 # _STOP accounting never sees a retired replica.
-from repro.runtime.wire import (_RETIRE, _STOP,  # noqa: F401
-                                BatchEnvelope, ReconfigMarker, RowExtent,
-                                WireCodec, WireRecord, slice_parts,
+from repro.runtime.wire import (_RETIRE, _STOP, K_CLOSE,  # noqa: F401
+                                K_OPEN, K_PLAIN, K_STEP, BatchEnvelope,
+                                ReconfigMarker, RowExtent, WireCodec,
+                                WireRecord, slice_parts,
                                 tree_unflatten_paths)
 
 
@@ -134,7 +136,8 @@ class ComputeNode:
                  shape_buckets: str = "exact",
                  max_batch_cap: int | None = None,
                  replica: int = 0,
-                 inbox: Channel | None = None):
+                 inbox: Channel | None = None,
+                 session_capacity: int = 64):
         self.index = index              # stage index (ReconfigMarker plans
         self.replica = replica          # are keyed by it); replica id within
         self.data_codec = data_codec    # the stage
@@ -190,6 +193,13 @@ class ComputeNode:
         self._required: list[str] = []
         self._exported: list[str] = []
         self._apply = None
+        # decode-session state: resident KV caches for sessions pinned to
+        # this replica (LRU-bounded — see SessionStore), plus the jitted
+        # prefill/step applies built only when the graph is decode-capable
+        self.sessions = SessionStore(session_capacity)
+        self._prefill_apply = None
+        self._decode_apply = None
+        self._is_tail = False
         self._threads: list[threading.Thread] = []
         self._stats_lock = threading.Lock()
         # live gauge (NOT a window counter — reset_stats leaves it):
@@ -244,6 +254,9 @@ class ComputeNode:
         self._required = graph.crossing_names(lo - 1) if lo > 0 else [""]
         self._exported = (graph.crossing_names(hi - 1) if hi < len(graph.nodes)
                           else [graph.nodes[-1].name])
+        # the tail stage trims decode outputs to the last position, so a
+        # prefill's full-sequence logits never ship past the final hop
+        self._is_tail = hi == len(graph.nodes)
         # pow2 pad-to-shape assumes every layer in the slice preserves and
         # acts independently along padded middle axes; a single pad-unsafe
         # layer (attention over the padded axis) makes this segment fall
@@ -281,6 +294,11 @@ class ComputeNode:
                    and jax.tree_util.tree_leaves(n.param_spec)]
         assert not missing, f"reconfig weights diff is missing {missing}"
         self._params = params
+        # the layer slice moved: every resident KV cache is keyed to the
+        # OLD slice and is now meaningless — drop them all.  The dispatcher
+        # displaces every active session at the same fence, so their
+        # generate loops re-prefill instead of stepping into SessionLost.
+        self.sessions.clear()
         self._make_apply()
         self.config_records.append(WireRecord(
             "reconfig", sum(np.asarray(l).nbytes for l in
@@ -299,6 +317,45 @@ class ComputeNode:
             return {n: acts[n] for n in exported}
 
         self._apply = jax.jit(apply_fn)
+
+        # autoregressive view of the same slice: prefill walks the chain
+        # once over a full prompt collecting each stateful layer's KV
+        # cache; step consumes one token per row against stacked caches
+        # (rows may sit at different sequence positions).  Only built for
+        # decode-capable graphs — a pure chain, so the slice has exactly
+        # one inbound and one outbound boundary activation.
+        self._prefill_apply = None
+        self._decode_apply = None
+        graph = self._graph
+        if (graph is None or not graph.decode_capable or not nodes
+                or len(self._required) != 1 or len(exported) != 1):
+            return
+
+        def prefill_fn(x):
+            acts = x
+            caches = {}
+            for node in nodes:
+                p = params.get(node.name, {})
+                if node.decode is not None:
+                    acts, caches[node.name] = node.decode.prefill_fn(p, acts)
+                else:
+                    acts = node.fn(p, acts)
+            return acts, caches
+
+        def step_fn(caches, x, pos):
+            acts = x
+            new = {}
+            for node in nodes:
+                p = params.get(node.name, {})
+                if node.decode is not None:
+                    acts, new[node.name] = node.decode.step_fn(
+                        p, caches[node.name], acts, pos)
+                else:
+                    acts = node.fn(p, acts)
+            return acts, new
+
+        self._prefill_apply = jax.jit(prefill_fn)
+        self._decode_apply = jax.jit(step_fn)
 
     def precompile(self) -> None:
         """Trace/compile every power-of-two padded batch specialization this
@@ -346,13 +403,27 @@ class ComputeNode:
             self._threads = [
                 threading.Thread(target=self._ingress_loop, daemon=True),
                 threading.Thread(target=self._compute_loop, daemon=True),
-                threading.Thread(target=self._egress_loop, daemon=True),
+                threading.Thread(target=self._exit_clearing(self._egress_loop),
+                                 daemon=True),
             ]
         else:
             self._threads = [
-                threading.Thread(target=self._legacy_loop, daemon=True)]
+                threading.Thread(target=self._exit_clearing(self._legacy_loop),
+                                 daemon=True)]
         for t in self._threads:
             t.start()
+
+    def _exit_clearing(self, loop):
+        """Wrap a replica's final pipeline stage so its exit — stop,
+        retire, drain, or a dead link — releases the resident KV caches:
+        an exited replica serves no further steps, and session recovery
+        is re-prefill elsewhere, so the memory must not linger."""
+        def run():
+            try:
+                loop()
+            finally:
+                self.sessions.clear()
+        return run
 
     def stop(self) -> None:
         self.inbox.send(_STOP)
@@ -659,21 +730,36 @@ class ComputeNode:
         sizes, so e.g. ragged sequence lengths merge into ONE apply instead
         of one bucket each; the original sizes ride the extents
         (``pad_trim``) and the tail collector trims them back out."""
-        if self.shape_buckets == "pow2" and self._pad_safe:
-            # only when every layer in this replica's slice is pad_safe:
-            # a segment containing e.g. attention over the middle axis
-            # would see padded positions, so it stays on exact bucketing
-            group = [self._pad_to_bucket(d) for d in group]
         n = sum(len(d.extents) for d in group)
         des_s = sum(d.deserialize_s for d in group)
-        buckets: dict[tuple, list[_Decoded]] = {}
+        # session frames (kind != K_PLAIN) take the decode path; plain
+        # traffic keeps the stacked-apply path.  Both run inside the same
+        # merged wave, so a chain can serve single-shot and decode traffic
+        # simultaneously off one set of replicas.
+        plain: list[_Decoded] = []
+        sess: list[_Decoded] = []
         for d in group:
-            buckets.setdefault(_signature(d.boundary), []).append(d)
-
+            (sess if any(e.kind != K_PLAIN for e in d.extents)
+             else plain).append(d)
         outs: list[tuple[list[RowExtent], dict[str, np.ndarray]]] = []
         failures: list[BatchEnvelope] = []
         compute_total = 0.0
         padded_rows = 0
+        if sess:
+            s_out, s_fail, s_compute, s_padded = self._decode_group(sess)
+            outs.extend(s_out)
+            failures.extend(s_fail)
+            compute_total += s_compute
+            padded_rows += s_padded
+        if self.shape_buckets == "pow2" and self._pad_safe:
+            # only when every layer in this replica's slice is pad_safe:
+            # a segment containing e.g. attention over the middle axis
+            # would see padded positions, so it stays on exact bucketing
+            plain = [self._pad_to_bucket(d) for d in plain]
+        buckets: dict[tuple, list[_Decoded]] = {}
+        for d in plain:
+            buckets.setdefault(_signature(d.boundary), []).append(d)
+
         for segs in buckets.values():
             extents = [e for d in segs for e in d.extents]
             total = sum(next(iter(d.boundary.values())).shape[0]
@@ -694,6 +780,125 @@ class ComputeNode:
         trace = BatchTrace(self.index, n, padded_rows, des_s, compute_total,
                            0.0, 0, encodes=0)
         return _Computed(outs, trace), failures
+
+    def _decode_group(self, group: list[_Decoded]
+                      ) -> tuple[list, list[BatchEnvelope], float, int]:
+        """Serve one merged wave's session traffic (kind != K_PLAIN).
+
+        Closes evict the session's resident caches and pass their payload
+        through untouched (each stage on the way to the tail evicts in
+        turn).  Opens run the slice's prefill individually (B=1 — jit
+        specializes per prompt length) and park the resulting caches in
+        this replica's :class:`SessionStore`; the tail stage trims its
+        output to the last position so only one row of logits ships.
+        Steps batch ACROSS sessions: per-session caches stack along the
+        leading axis, positions ride per row, and ONE jitted step apply
+        serves every session in the wave — continuous batching of decode
+        at *different* sequence positions.  A step whose session has no
+        resident cache here (evicted, repartitioned, replica restarted)
+        fails with a ``SessionLost`` error envelope; recovery is the
+        generate loop's re-prefill, never a replay.
+
+        Session envelopes carry exactly one extent by protocol (routers
+        pin whole envelopes; a multi-session envelope could not route
+        sticky), enforced here.
+
+        Returns ``(outs, failures, compute_s, padded_rows)`` for the
+        caller's trace accounting.
+        """
+        outs: list[tuple[list[RowExtent], dict[str, np.ndarray]]] = []
+        failures: list[BatchEnvelope] = []
+        compute_s = 0.0
+        padded = 0
+        out_name = self._exported[0] if self._exported else ""
+        steps: list[tuple[RowExtent, np.ndarray, Any]] = []
+        for d in group:
+            if len(d.extents) != 1:
+                failures.append(BatchEnvelope(
+                    d.extents, b"",
+                    error="decode protocol violation: a session envelope "
+                          "must carry exactly one extent"))
+                continue
+            e = d.extents[0]
+            if e.kind == K_CLOSE:
+                self.sessions.pop(e.session)
+                outs.append(([e], d.boundary))
+                continue
+            if self._prefill_apply is None:
+                failures.append(BatchEnvelope(
+                    [e], b"",
+                    error="SessionUnsupported: this partition has no "
+                          "autoregressive view (the graph declares no "
+                          "LayerDecode nodes, or the slice is not a "
+                          "single-boundary chain)"))
+                continue
+            x = next(iter(d.boundary.values()))
+            if e.kind == K_OPEN:
+                t0 = time.perf_counter()
+                try:
+                    y, caches = self._prefill_apply(jax.numpy.asarray(x))
+                    y = np.asarray(y)
+                except Exception:
+                    failures.append(BatchEnvelope(
+                        [e], b"", error=traceback.format_exc()))
+                    continue
+                finally:
+                    compute_s += time.perf_counter() - t0
+                # park the caches even when the slice holds no stateful
+                # layer (caches == {}): residency doubles as the routing
+                # check a later step validates against
+                self.sessions.put(e.session, caches)
+                if self._is_tail:
+                    y = y[:, -1:]
+                padded += x.shape[0]
+                outs.append(([e], {out_name: y}))
+            elif e.kind == K_STEP:
+                cache = self.sessions.get(e.session)
+                if cache is None:
+                    failures.append(BatchEnvelope([e], b"", error=(
+                        f"SessionLost: stage {self.index} replica "
+                        f"{self.replica} holds no KV cache for session "
+                        f"{e.session!r} (evicted, repartitioned, or the "
+                        "replica restarted); re-open the session from "
+                        "its retained history")))
+                    continue
+                steps.append((e, np.asarray(x), cache))
+            else:
+                failures.append(BatchEnvelope(
+                    [e], b"",
+                    error=f"unknown session frame kind {e.kind}"))
+        if steps:
+            b = len(steps)
+            target = _bucket_rows(b) if self.pad_batches else b
+            # pad the batch by repeating the last row (token, position AND
+            # caches): decode arithmetic is row-independent, so the real
+            # rows are bit-identical to an unpadded apply and the padded
+            # duplicates' outputs/caches are simply dropped
+            rows = steps + [steps[-1]] * (target - b)
+            xs = jax.numpy.asarray(
+                np.concatenate([x for _, x, _ in rows], axis=0))
+            pos = jax.numpy.asarray(
+                np.asarray([e.pos for e, _, _ in rows], np.int32))
+            caches = jax.tree_util.tree_map(
+                lambda *leaves: jax.numpy.concatenate(leaves, axis=0),
+                *[c for _, _, c in rows])
+            t0 = time.perf_counter()
+            try:
+                y, new = self._decode_apply(caches, xs, pos)
+                y = np.asarray(y)
+            except Exception:
+                compute_s += time.perf_counter() - t0
+                tb = traceback.format_exc()
+                failures.extend(BatchEnvelope([e], b"", error=tb)
+                                for e, _, _ in steps)
+                return outs, failures, compute_s, padded
+            compute_s += time.perf_counter() - t0
+            padded += target
+            for i, (e, _, _) in enumerate(steps):
+                self.sessions.put(e.session, jax.tree_util.tree_map(
+                    lambda a, i=i: a[i:i + 1], new))
+                outs.append(([e], {out_name: y[i:i + 1]}))
+        return outs, failures, compute_s, padded
 
     # -- stage 3: egress (encode once per bucket, relay) ----------------------
     def _relay(self, item: Any) -> None:
@@ -848,6 +1053,14 @@ class ComputeNode:
         samples: list[tuple[RowExtent, dict[str, np.ndarray]]] = []
         failed: list[BatchEnvelope] = []
         for env in work:
+            if any(ext.kind != K_PLAIN for ext in env.extents):
+                # session residency needs the staged pipeline's sticky
+                # decode path; the per-request legacy path has neither
+                failed.append(BatchEnvelope(
+                    env.extents, b"",
+                    error="decode sessions require the staged runtime "
+                          "(ComputeNode(staged=True))"))
+                continue
             t0 = time.perf_counter()
             try:
                 flat, _ = self.data_codec.decode_tree(env.blob)

@@ -63,7 +63,8 @@ from typing import TYPE_CHECKING
 
 from repro.runtime.node import _RETIRE, _STOP, ComputeNode
 from repro.runtime.transport import Channel, ChannelClosed
-from repro.runtime.wire import BatchEnvelope, ReconfigMarker
+from repro.runtime.wire import (K_CLOSE, K_OPEN, K_STEP, BatchEnvelope,
+                                ReconfigMarker)
 
 if TYPE_CHECKING:
     from repro.runtime.topology import StageSpec
@@ -123,7 +124,7 @@ class StageGroup:
     def __init__(self, index: int, spec: "StageSpec",
                  replicas: list[ComputeNode], input_channel: Channel,
                  upstream: "StageGroup | None",
-                 fail_batch=None):
+                 fail_batch=None, note_displaced=None):
         self.index = index
         self.spec = spec
         self.replicas = replicas            # all live replicas (stats view)
@@ -135,6 +136,11 @@ class StageGroup:
         # instead of silently killing the router thread and hanging every
         # client — mirroring the per-batch isolation inside ComputeNode
         self.fail_batch = fail_batch
+        # (sessions) callback: the replica these decode sessions were
+        # pinned to left the routing set (drained at a fence, or its link
+        # died), so their KV caches at this stage are gone — the
+        # dispatcher flags them for session-layer re-prefill
+        self.note_displaced = note_displaced
         # epoch -> (markers the DOWNSTREAM barrier must count, members
         # remaining after the fence).  Written before the broadcast, read
         # by the next router / the collector when its barrier trips.
@@ -230,6 +236,20 @@ class StageGroup:
         current_epoch = 0
         tally = FenceTally(self.upstream_members())
         held: list[BatchEnvelope] = []
+        # decode-session stickiness: session id -> the member holding its
+        # KV cache at this stage.  Router-thread-local like the routing
+        # set itself; opens pin (policy pick), steps follow the pin,
+        # closes unpin, and a member leaving the set displaces its
+        # sessions (note_displaced).  Session envelopes carry exactly one
+        # extent, so an envelope never needs splitting to route sticky.
+        affinity: dict = {}
+
+        def displace_sessions(m: ComputeNode) -> None:
+            owned = [s for s, mm in affinity.items() if mm is m]
+            for s in owned:
+                del affinity[s]
+            if owned and self.note_displaced is not None:
+                self.note_displaced(owned)
 
         def fail_extents(extents, why: str,
                          retryable: bool = False) -> None:
@@ -301,6 +321,7 @@ class StageGroup:
             if m in members:
                 members.remove(m)
                 dead.append(m)
+            displace_sessions(m)
             fail_stranded(m)
             settle_tokens(m)
 
@@ -355,6 +376,22 @@ class StageGroup:
                 raise ChannelClosed(
                     f"stage {self.index}: no live replicas (all inbox "
                     "links dead)")
+            ext = env.extents[0] if len(env.extents) == 1 else None
+            sess = ext.session if ext is not None else None
+            if sess is not None:
+                pinned = affinity.get(sess)
+                if ext.kind == K_CLOSE:
+                    affinity.pop(sess, None)
+                if pinned is not None:
+                    if pinned in members:
+                        if not member_send(pinned, env, data=True):
+                            raise ChannelClosed("routed onto a dead link")
+                        return
+                    # pin points outside the routing set (member drained
+                    # or died since): fall through to a policy pick — an
+                    # open re-prefills there; a step meets SessionLost at
+                    # a replica with no cache, which is the truth
+                    affinity.pop(sess, None)
             if len(members) == 1:
                 pick = 0
             elif self.routing == "lqd":
@@ -366,8 +403,11 @@ class StageGroup:
             else:
                 pick = rr % len(members)
             rr = (pick + 1) % len(members)
-            if not member_send(members[pick], env, data=True):
+            target = members[pick]
+            if not member_send(target, env, data=True):
                 raise ChannelClosed("routed onto a dead link")
+            if sess is not None and ext.kind in (K_OPEN, K_STEP):
+                affinity[sess] = target
 
         def broadcast(item) -> None:
             """One control token to every member.  A member whose link
@@ -442,6 +482,9 @@ class StageGroup:
                 for m in drops:
                     if m in members:
                         members.remove(m)
+                        # a drained member's resident KV caches retire
+                        # with it: flag its sessions for re-prefill
+                        displace_sessions(m)
                         try:
                             m.retire()  # queued behind the fence: flush+exit
                         except Exception:

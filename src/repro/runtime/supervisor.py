@@ -309,7 +309,9 @@ class WorkerHandle:
             "graph_args": cfg.graph_args,
             "stage": self.index, "replica": self.replica,
             "data_codec": [c.serializer, c.compression, c.zfp_rate,
-                           c.vectorized],
+                           c.vectorized, c.small_bypass],
+            "session_capacity": getattr(self._spec, "session_capacity",
+                                        None) or 64,
             "max_batch": self._max_batch,
             "coalesce_s": self._coalesce_s,
             "max_batch_cap": self.max_batch_cap,

@@ -46,6 +46,10 @@ class StageSpec:
     stages may each bind a different one.  ``max_batch`` / ``coalesce_s``
     / ``shape_buckets`` / ``max_batch_cap`` override the engine-wide
     defaults for this stage only (None = inherit).
+
+    ``session_capacity`` bounds each replica's resident decode-session KV
+    caches (LRU eviction past it — an evicted session re-prefills, so this
+    is a memory ceiling, not a correctness knob; None = runtime default).
     """
 
     layers: tuple[int, int]                 # [lo, hi) over graph.nodes
@@ -56,6 +60,7 @@ class StageSpec:
     coalesce_s: float | None = None
     shape_buckets: str | None = None
     max_batch_cap: int | None = None
+    session_capacity: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)

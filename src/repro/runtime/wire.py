@@ -134,6 +134,26 @@ class RowExtent:
     # under an incremented attempt so stale failure reports for an older
     # attempt can be told apart from the one currently in flight.
     attempt: int = 0
+    # -- decode-session fields (wire v4) ------------------------------------
+    # session id for autoregressive decode traffic (None for single-shot
+    # requests).  A session-bearing envelope carries EXACTLY one extent:
+    # stage routers pin the session to the replica holding its KV cache,
+    # and a multi-session envelope could not route sticky.
+    session: Any = None
+    # sequence position of the token(s) this extent carries (the KV cache
+    # slot a decode step writes); 0 for opens, which always prefill from
+    # position 0
+    pos: int = 0
+    # 0 = plain single-shot row; 1 = session open (full-prompt prefill);
+    # 2 = decode step (one new token); 3 = session close (evict KV)
+    kind: int = 0
+
+
+# RowExtent.kind values (module constants so call sites read as prose)
+K_PLAIN = 0
+K_OPEN = 1
+K_STEP = 2
+K_CLOSE = 3
 
 
 @dataclasses.dataclass
@@ -274,6 +294,17 @@ class ControlFrame:
     payload: dict = dataclasses.field(default_factory=dict)
 
 
+# small-payload bypass magic: a leaf at most `small_bypass` bytes is
+# shipped as this prefix + raw .npy instead of going through the
+# configured serializer/LZ4 (per-token decode frames are a few KB, where
+# ZFP/LZ4 setup cost exceeds the transfer savings).  Checked on decode
+# BEFORE LZ4, so the prefix must be distinguishable from every stream the
+# codecs emit: ZFP starts b"ZFPR", Q8 b"Q8BQ", JSON b"{", .npy b"\\x93";
+# an LZ4 block stream has no magic, so an 8-byte sentinel keeps the
+# accidental-collision odds negligible.
+_RAW_BYPASS_MAGIC = b"DWRAWNP1"
+
+
 @dataclasses.dataclass(frozen=True)
 class WireCodec:
     serializer: str = "zfp"     # "json" | "zfp" | "q8" | "raw"
@@ -283,6 +314,10 @@ class WireCodec:
     # implementations (the PR 1 hot path) — kept so serve_load can measure
     # the staged runtime against a faithful same-codec PR 1 baseline
     vectorized: bool = True
+    # arrays at most this many bytes skip the serializer/LZ4 entirely and
+    # ship as magic-prefixed raw .npy (lossless); 0 disables the bypass.
+    # Decode auto-detects via the prefix, so mixed-size trees are fine.
+    small_bypass: int = 0
 
     @property
     def label(self) -> str:
@@ -300,6 +335,11 @@ class WireCodec:
 
     # -- arrays (weights / activations) ------------------------------------
     def encode_array(self, arr: np.ndarray) -> bytes:
+        if (self.small_bypass and arr.nbytes <= self.small_bypass
+                and (self.serializer != "raw" or self.compression != "none")):
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            return _RAW_BYPASS_MAGIC + buf.getvalue()
         if self.serializer == "raw":
             buf = io.BytesIO()
             np.save(buf, arr, allow_pickle=False)
@@ -322,6 +362,9 @@ class WireCodec:
         bare ``ValueError`` from the codec internals — the node stages
         turn that into a per-batch failure, not a dead stage thread."""
         try:
+            if blob.startswith(_RAW_BYPASS_MAGIC):
+                return np.load(io.BytesIO(blob[len(_RAW_BYPASS_MAGIC):]),
+                               allow_pickle=False)
             if self.compression == "lz4":
                 blob = codecs.Lz4Codec(
                     vectorized=self.vectorized).decompress(blob)
@@ -426,12 +469,14 @@ FRAME_MAGIC = b"DW"
 # v2 added the control-plane frame type (_F_CONTROL: heartbeats, worker
 # config/knob/bye messages); v3 added the reliability fields (a u32
 # `attempt` tag on every extent header and a `retryable` flags byte on
-# envelopes) for the dispatcher's replay path.  Readers reject any other
-# version outright, so an old peer meets a clean WireFormatError instead
-# of a silent misparse; :func:`unframe_compat` keeps the v2 decode path
-# alive for mixed-version tests and tooling.
-FRAME_VERSION = 3
-_COMPAT_VERSIONS = (2, FRAME_VERSION)
+# envelopes) for the dispatcher's replay path; v4 added the decode-session
+# fields (a `kind` byte + i64 `pos` on the extent header and a
+# length-prefixed session id) for token-step frames.  Readers reject any
+# other version outright, so an old peer meets a clean WireFormatError
+# instead of a silent misparse; :func:`unframe_compat` keeps the v2/v3
+# decode paths alive for mixed-version tests and tooling.
+FRAME_VERSION = 4
+_COMPAT_VERSIONS = (2, 3, FRAME_VERSION)
 
 _F_ENVELOPE = 1
 _F_MARKER = 2
@@ -500,6 +545,16 @@ def _pack_extent(e: RowExtent, version: int = FRAME_VERSION) -> bytes:
     trim = (struct.pack("<i", -1) if e.pad_trim is None
             else struct.pack(f"<i{len(e.pad_trim)}q", len(e.pad_trim),
                              *e.pad_trim))
+    if version >= 4:
+        head = struct.pack("<qqqdIBq", e.request_id, e.seq, e.rows,
+                           e.t_submit, e.attempt, e.kind, e.pos)
+        sess = _pack_bytes(_pack_obj(e.session))
+        return head + _pack_bytes(cid) + sess + trim
+    if e.kind or e.pos or e.session is not None:
+        raise WireFormatError(
+            f"session extent (kind={e.kind}, pos={e.pos}, "
+            f"session={e.session!r}) is not representable in wire "
+            f"v{version} (decode sessions need v4)")
     if version >= 3:
         head = struct.pack("<qqqdI", e.request_id, e.seq, e.rows,
                            e.t_submit, e.attempt)
@@ -514,8 +569,14 @@ def _pack_extent(e: RowExtent, version: int = FRAME_VERSION) -> bytes:
 
 def _unpack_extent(blob: bytes, off: int,
                    version: int = FRAME_VERSION) -> tuple[RowExtent, int]:
-    attempt = 0
-    if version >= 3:
+    attempt, kind, pos = 0, 0, 0
+    if version >= 4:
+        off = _checked(blob, off, 45, "extent header")
+        rid, seq, rows, t_submit, attempt, kind, pos = struct.unpack_from(
+            "<qqqdIBq", blob, off - 45)
+        if kind > K_CLOSE:
+            raise WireFormatError(f"unknown extent kind {kind}")
+    elif version >= 3:
         off = _checked(blob, off, 36, "extent header")
         rid, seq, rows, t_submit, attempt = struct.unpack_from(
             "<qqqdI", blob, off - 36)
@@ -530,6 +591,17 @@ def _unpack_extent(blob: bytes, off: int,
         hash(cid)
     except TypeError as e:
         raise WireFormatError(f"unhashable client id on the wire: {e}") from e
+    session = None
+    if version >= 4:
+        off = _checked(blob, off, 4, "extent session id length")
+        (ls,) = struct.unpack_from("<I", blob, off - 4)
+        off = _checked(blob, off, ls, "extent session id")
+        session = _unpack_obj(blob[off - ls:off])
+        try:
+            hash(session)
+        except TypeError as e:
+            raise WireFormatError(
+                f"unhashable session id on the wire: {e}") from e
     off = _checked(blob, off, 4, "extent pad_trim count")
     (nt,) = struct.unpack_from("<i", blob, off - 4)
     trim = None
@@ -537,7 +609,8 @@ def _unpack_extent(blob: bytes, off: int,
         off = _checked(blob, off, 8 * nt, "extent pad_trim values")
         trim = struct.unpack_from(f"<{nt}q", blob, off - 8 * nt)
     return RowExtent(rid, cid, seq, rows, t_submit=t_submit,
-                     pad_trim=trim, attempt=attempt), off
+                     pad_trim=trim, attempt=attempt,
+                     session=session, pos=pos, kind=kind), off
 
 
 def _codec_fields(c: "WireCodec") -> bytes:
@@ -560,8 +633,9 @@ def frame(item: Any, version: int = FRAME_VERSION) -> bytes:
     :class:`BatchEnvelope`, a :class:`ReconfigMarker` (with its
     :class:`NodePlan` payloads), or the ``_STOP``/``_RETIRE`` tokens.
     ``version`` selects the wire revision to speak (current by default;
-    v2 is kept for compat tests and refuses items that carry the v3-only
-    reliability fields)."""
+    v2/v3 are kept for compat tests and refuse items that carry fields
+    introduced after them — v3-only reliability fields, v4-only decode
+    session fields)."""
     if version not in _COMPAT_VERSIONS:
         raise WireFormatError(
             f"cannot speak frame version {version} "
@@ -629,8 +703,10 @@ def _unframe_envelope(blob: bytes, off: int,
         except UnicodeDecodeError as e:
             raise WireFormatError(f"corrupt envelope error text: {e}") from e
     off = _checked(blob, off, 4, "envelope extent count")
-    # min extent: the fixed header (36B in v3, 32B in v2) + 2 u32s
-    min_extent = (36 if version >= 3 else 32) + 8
+    # min extent: the fixed header (45B in v4, 36B in v3, 32B in v2) plus
+    # the cid-length / pad_trim-count u32s (v4 adds a session-length u32)
+    min_extent = (45 + 12 if version >= 4
+                  else (36 if version >= 3 else 32) + 8)
     (n,) = struct.unpack_from("<I", blob, off - 4)
     if n > (len(blob) - off) // min_extent:
         raise WireFormatError(
@@ -745,8 +821,9 @@ def unframe(blob: bytes) -> Any:
 
 def unframe_compat(blob: bytes) -> Any:
     """Like :func:`unframe` but accepts every supported wire revision
-    (currently v2 and v3).  v2 extents come back with ``attempt=0`` and
-    v2 envelopes with ``retryable=False`` — exactly the semantics a v2
+    (currently v2, v3 and v4).  v2 extents come back with ``attempt=0``
+    and v2 envelopes with ``retryable=False``; pre-v4 extents come back
+    with ``session=None``/``kind=0`` — exactly the semantics an older
     speaker meant.  For tooling and rolling-upgrade tests; the serving
     hot path stays strict."""
     return _unframe_versions(blob, _COMPAT_VERSIONS)

@@ -96,8 +96,11 @@ class Worker:
     def _on_config(self, p: dict) -> None:
         factory = load_graph_factory(p["graph_factory"])
         self._graph = factory(**(p.get("graph_args") or {}))
-        ser, comp, rate, vec = p["data_codec"]
-        codec = WireCodec(ser, comp, zfp_rate=rate, vectorized=vec)
+        # 4-element form predates the small-payload bypass: default it off
+        ser, comp, rate, vec = p["data_codec"][:4]
+        bypass = p["data_codec"][4] if len(p["data_codec"]) > 4 else 0
+        codec = WireCodec(ser, comp, zfp_rate=rate, vectorized=vec,
+                          small_bypass=bypass)
         host, port = p["host"], p["port"]
         inbox = dial_channel(host, port, p["in_cid"], role="recv",
                              capacity=p["in_capacity"])
@@ -110,6 +113,7 @@ class Worker:
             max_batch=p["max_batch"], staged=p.get("staged", True),
             shape_buckets=p.get("shape_buckets", "exact"),
             max_batch_cap=p.get("max_batch_cap"),
+            session_capacity=p.get("session_capacity", 64) or 64,
             inbox=inbox)
         node.coalesce_s = float(p["coalesce_s"])
         node.next_inbox = out

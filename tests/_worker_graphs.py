@@ -53,6 +53,18 @@ def poison_graph(depth: int = 4, d: int = D) -> LayerGraph:
     return g
 
 
+def lm_graph(**kw) -> LayerGraph:
+    """The small decode-capable transformer the decode-serving tests
+    standardize on — deterministic builder, so the supervisor-side and
+    worker-side copies agree layer for layer (and the KV cache capacity,
+    a graph-level constant, matches across processes)."""
+    from repro.models.lm_graph import decode_lm_graph
+    defaults = dict(vocab=32, d_model=16, n_layers=2, num_heads=2,
+                    kv_heads=2, head_dim=8, d_ff=32, cache_len=48)
+    defaults.update(kw)
+    return decode_lm_graph(**defaults)
+
+
 def mlp_graph(depth: int = 6, d: int = D) -> LayerGraph:
     """The toy tanh MLP the runtime tests standardize on — deterministic,
     so the supervisor-side and worker-side copies agree layer for layer."""

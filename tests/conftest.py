@@ -93,3 +93,19 @@ def _no_thread_leaks():
         "test leaked live child processes (missing Supervisor.close()/"
         f"reap): pids {sorted(leaked)}"
     )
+
+
+@pytest.fixture(autouse=True)
+def _no_session_residue():
+    """Fail any test that leaves resident decode-session KV caches behind
+    in a SessionStore: session-keyed maps in runtime/ must be evicted on
+    session end (close frame / fence clear / thread-exit clear — the
+    per-client-GC precedent), or long-lived replicas leak one KV cache
+    per ephemeral session."""
+    yield
+    from repro.runtime.session import live_session_stores
+    residue = {id(s): s.keys() for s in live_session_stores() if len(s)}
+    assert not residue, (
+        "test leaked resident decode-session KV caches (session-keyed "
+        f"state must be evicted on session end): {residue}"
+    )

@@ -23,7 +23,8 @@ from repro.runtime.dispatcher import (DeadlineExceeded, DispatcherCodecs,
 from repro.runtime.supervisor import (SupervisorConfig, WorkerHandle,
                                       supervised_engine)
 from repro.runtime.wire import WireCodec
-from tests._worker_graphs import POISON, mlp_graph, poison_graph
+from repro.models.lm_graph import pipeline_decode_reference
+from tests._worker_graphs import POISON, lm_graph, mlp_graph, poison_graph
 from tools.chaos import Chaos
 
 pytestmark = pytest.mark.slow
@@ -439,6 +440,63 @@ def test_deadline_expires_on_hung_worker_in_bounded_time():
                                          timeout=60) == 2
         np.testing.assert_allclose(eng.submit(x).result(timeout=60), ref,
                                    atol=1e-5)
+    finally:
+        eng.shutdown()
+        sup.close()
+
+
+def test_kill_mid_generation_sessions_reprefill_chain_keeps_serving():
+    """SIGKILL one of two stage-0 worker processes while decode sessions
+    are mid-generation: the victims' resident KV caches die with it, the
+    displaced sessions re-prefill their retained history onto the
+    survivor (restart='auto' + RetryPolicy) and finish BIT-IDENTICAL to
+    the single-device reference, sessions pinned to the survivor never
+    notice, the supervisor respawns the replica, and single-shot traffic
+    still answers afterwards — no hangs anywhere."""
+    g, params, eng, sup = _build(
+        _cfg(graph_factory=GRAPHS + ":lm_graph"), graph=lm_graph,
+        retry_policy=RetryPolicy(max_attempts=5, backoff_s=0.05,
+                                 retry_budget=64.0, refill_per_s=32.0))
+    chaos = Chaos(sup)
+    prompts = [[1, 5, 9, 2], [3, 3, 7], [2, 8, 4, 6, 1]]
+    m = 30
+    outs = [[] for _ in prompts]
+    errs: list[BaseException] = []
+
+    def one(i, p):
+        try:
+            for tok in eng.generate(p, m):
+                outs[i].append(tok)
+        except BaseException as e:      # noqa: BLE001 - asserted below
+            errs.append(e)
+
+    try:
+        eng.start()
+        threads = [threading.Thread(target=one, args=(i, p))
+                   for i, p in enumerate(prompts)]
+        for t in threads:
+            t.start()
+        deadline = time.monotonic() + 120
+        while not all(len(o) >= 3 for o in outs):
+            assert time.monotonic() < deadline, \
+                f"sessions never ramped: {[len(o) for o in outs]}"
+            assert not errs, f"session died before the kill: {errs}"
+            time.sleep(0.01)
+        chaos.kill(chaos.pick(stage=0))
+        chaos.wait_death(stage=0, timeout=30)
+        for t in threads:
+            t.join(300)
+        assert not any(t.is_alive() for t in threads), "generation hung"
+        assert not errs, f"sessions dropped across the kill: {errs}"
+        assert outs == [pipeline_decode_reference(g, params, p, m)
+                        for p in prompts]
+        # the stage heals, and plain single-shot traffic still answers
+        chaos.wait_respawn(stage=0, timeout=30)
+        assert chaos.wait_stage_full(eng.dispatcher, 0, timeout=30) == 2
+        x = np.asarray([prompts[0]], np.int32)
+        np.testing.assert_allclose(
+            eng.submit(x).result(timeout=60),
+            np.asarray(g.apply(params, x)), atol=1e-4)
     finally:
         eng.shutdown()
         sup.close()

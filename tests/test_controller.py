@@ -263,7 +263,7 @@ def test_live_repartition_zero_loss_fifo_under_load():
     def client(c):
         try:
             xs = [sample(100 * c + i) for i in range(per_client)]
-            results[c] = list(eng.stream(xs, client_id=c))
+            results[c] = list(eng.submit_stream(xs, client_id=c))
         except Exception as e:                  # pragma: no cover
             errors.append(e)
 

@@ -61,7 +61,7 @@ def test_concurrent_submit_from_many_threads():
     def client(c):
         try:
             xs = [sample(100 * c + i) for i in range(per_client)]
-            results[c] = list(eng.stream(xs, client_id=c))
+            results[c] = list(eng.submit_stream(xs, client_id=c))
         except Exception as e:                      # pragma: no cover
             errors.append(e)
 

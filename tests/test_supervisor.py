@@ -42,14 +42,15 @@ def _cfg(**kw):
 
 # -- ControlFrame on the wire -------------------------------------------------
 
-def test_control_frame_roundtrip_is_version_3():
+def test_control_frame_roundtrip_is_version_4():
     cf = ControlFrame("hb", {"snapshot": {"n": 3, "compute_s": 0.5,
                                           "nested": [1, (2, 3), None]}})
     blob = frame(cf)
     # control frames bumped the wire to v2; the reliability fields
-    # (extent `attempt` + envelope `retryable`) bumped it to v3 — an
-    # older speaker must reject the frame loudly instead of misparsing
-    assert blob[2] == FRAME_VERSION == 3
+    # (extent `attempt` + envelope `retryable`) bumped it to v3; the
+    # decode-session fields (extent `kind`/`pos`/`session`) bumped it to
+    # v4 — an older speaker must reject the frame loudly, not misparse
+    assert blob[2] == FRAME_VERSION == 4
     back = unframe(blob)
     assert isinstance(back, ControlFrame)
     assert back.kind == "hb"

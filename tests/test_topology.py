@@ -159,7 +159,7 @@ def _stream_clients(eng, g, params, n_clients, per_client, base=0):
     def client(c):
         try:
             xs = [sample(base + 100 * c + i) for i in range(per_client)]
-            results[c] = list(eng.stream(xs, client_id=c))
+            results[c] = list(eng.submit_stream(xs, client_id=c))
         except Exception as e:                  # pragma: no cover
             errors.append(e)
 

@@ -163,24 +163,28 @@ def test_unframe_corruption_fuzz():
 
 
 def test_old_frame_version_rejected_by_name_compat_path_decodes():
-    """FRAME_VERSION bumped to 3 (attempt + retryable): a v2 frame is
+    """FRAME_VERSION bumped to 4 (decode-session fields): old frames are
     refused by the strict decoder with an error NAMING the versions, the
-    explicit compat path still decodes it (reliability fields at their
-    v2 defaults), and v3-only field values refuse to frame as v2 rather
-    than silently dropping the replay tag."""
+    explicit compat path still decodes v2/v3 (missing fields at their
+    defaults), and newer-only field values refuse to frame as an older
+    version rather than silently dropping the tag."""
     from repro.runtime.wire import FRAME_VERSION, unframe_compat
-    assert FRAME_VERSION == 3
+    assert FRAME_VERSION == 4
     env = BatchEnvelope([RowExtent(7, "c", 2, 4, t_submit=1.25)],
                         b"payload", epoch=2)
-    old = frame(env, version=2)
-    with pytest.raises(WireFormatError, match=r"version 2.*speaking 3"):
-        unframe(old)
-    r = unframe_compat(old)
-    assert r.blob == b"payload" and r.extents[0].request_id == 7
-    assert r.extents[0].attempt == 0 and r.retryable is False
+    for old_v in (2, 3):
+        old = frame(env, version=old_v)
+        with pytest.raises(WireFormatError,
+                           match=rf"version {old_v}.*speaking 4"):
+            unframe(old)
+        r = unframe_compat(old)
+        assert r.blob == b"payload" and r.extents[0].request_id == 7
+        assert r.extents[0].attempt == 0 and r.retryable is False
+        assert r.extents[0].session is None
+        assert r.extents[0].kind == 0 and r.extents[0].pos == 0
     # current frames flow through the compat path too
-    r3 = unframe_compat(frame(env))
-    assert r3.extents[0].t_submit == 1.25
+    r4 = unframe_compat(frame(env))
+    assert r4.extents[0].t_submit == 1.25
     # v3-only values are not representable in v2
     with pytest.raises(WireFormatError, match="attempt"):
         frame(BatchEnvelope([RowExtent(1, 0, 0, 1, attempt=1)], b""),
@@ -188,6 +192,10 @@ def test_old_frame_version_rejected_by_name_compat_path_decodes():
     with pytest.raises(WireFormatError, match="retryable"):
         frame(BatchEnvelope([RowExtent(1, 0, 0, 1)], b"", error="e",
                             retryable=True), version=2)
+    # v4-only values (decode sessions) are not representable in v3
+    with pytest.raises(WireFormatError, match="session"):
+        frame(BatchEnvelope([RowExtent(1, 0, 0, 1, session="s", kind=2,
+                                       pos=5)], b""), version=3)
 
 
 # -- decode_tree / decode_array: untrusted blobs ------------------------------
