@@ -36,7 +36,7 @@ def main() -> None:
         try:
             benches[name]()
             print(f"# {name} done in {time.perf_counter()-t0:.1f}s\n")
-        except Exception as e:
+        except Exception as e:  # deferlint: swallow(recorded in failed[]; run exits nonzero below)
             failed.append(name)
             print(f"# {name} FAILED: {type(e).__name__}: {e}\n")
     if failed:

@@ -469,9 +469,13 @@ class Supervisor:
         self.on_spawned = None
         # control listener: workers dial back here with their spawn token
         s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        s.bind(("127.0.0.1", 0))
-        s.listen(64)
+        try:
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            s.bind(("127.0.0.1", 0))
+            s.listen(64)
+        except BaseException:
+            s.close()
+            raise
         self._csock = s
         threading.Thread(target=self._accept_loop, daemon=True).start()
 
@@ -510,13 +514,28 @@ class Supervisor:
         cfg = self._cfg
         spec = dispatcher.topology.stages[stage]
         capacity = dispatcher._defaults["queue_depth"]
-        inbox, in_cid = self._transport.expect_channel(capacity, role="send")
-        outbox, out_cid = self._transport.expect_channel(capacity,
-                                                         role="recv")
         token = os.urandom(8).hex()
-        handle = WorkerHandle(self, stage, replica, inbox, outbox,
-                              in_cid, out_cid, capacity, token, spec,
-                              dispatcher.codecs.data)
+        inbox, in_cid = self._transport.expect_channel(capacity, role="send")
+        try:
+            outbox, out_cid = self._transport.expect_channel(capacity,
+                                                             role="recv")
+        except BaseException:
+            # the first half-channel must not stay registered forever: a
+            # late dial with its cid would wire a connection onto a
+            # channel no handle owns
+            inbox.close()
+            self._transport.unexpect_channel(in_cid)
+            raise
+        try:
+            handle = WorkerHandle(self, stage, replica, inbox, outbox,
+                                  in_cid, out_cid, capacity, token, spec,
+                                  dispatcher.codecs.data)
+        except BaseException:
+            inbox.close()
+            outbox.close()
+            self._transport.unexpect_channel(in_cid)
+            self._transport.unexpect_channel(out_cid)
+            raise
         handle._max_batch = spec.max_batch \
             or dispatcher._defaults["max_batch"]
         handle.max_batch_cap = max(
@@ -540,17 +559,16 @@ class Supervisor:
                "--connect", f"{host}:{port}", "--token", token]
         if cfg.allow_chaos:
             cmd.append("--chaos")
-        handle.proc = subprocess.Popen(cmd, env=env)
+        try:
+            handle.proc = subprocess.Popen(cmd, env=env)
+        except BaseException:
+            # exec failure (bad interpreter path, fork limits): unwind the
+            # registrations exactly like a stillborn worker
+            self._abort_spawn(handle)
+            raise
         if not handle._hello.wait(cfg.spawn_timeout_s):
             # stillborn worker: unwind everything this spawn registered
-            self._transport.unexpect_channel(in_cid)
-            self._transport.unexpect_channel(out_cid)
-            handle.dead = True
-            handle.retiring = True
-            handle.kill_links()
-            handle.reap(1.0)
-            with self._lock:
-                self._by_token.pop(token, None)
+            self._abort_spawn(handle)
             raise ChannelClosed(
                 f"worker stage {stage} replica {replica} (pid "
                 f"{handle.proc.pid}) never dialed back within "
@@ -558,6 +576,18 @@ class Supervisor:
         self._record("spawn", stage=stage, replica=replica,
                      pid=handle.proc.pid)
         return handle
+
+    def _abort_spawn(self, handle: WorkerHandle) -> None:
+        """Unwind everything a failed spawn registered: pending
+        half-channels, data links, the child (if any), the token slot."""
+        self._transport.unexpect_channel(handle._in_cid)
+        self._transport.unexpect_channel(handle._out_cid)
+        handle.dead = True
+        handle.retiring = True
+        handle.kill_links()
+        handle.reap(1.0)
+        with self._lock:
+            self._by_token.pop(handle.token, None)
 
     # -- control-plane accept ---------------------------------------------------
     def _accept_loop(self) -> None:

@@ -432,9 +432,13 @@ class TcpTransport(Transport):
             if self._listener is not None:
                 return
             s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-            s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-            s.bind((self._host, 0))
-            s.listen(128)
+            try:
+                s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+                s.bind((self._host, 0))
+                s.listen(128)
+            except BaseException:
+                s.close()
+                raise
             self._listener = s
             threading.Thread(target=self._accept_loop, daemon=True).start()
 
@@ -556,6 +560,9 @@ def dial_channel(host: str, port: int, cid: int, role: str,
     cross-process channels."""
     if role not in ("send", "recv"):
         raise ValueError(f"bad channel role {role!r}")
+    # build the channel before connecting: once the socket exists, every
+    # remaining step either hands it off or closes it
+    ch = TcpChannel(capacity)
     sock = socket.create_connection((host, port), timeout=timeout)
     try:
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -567,7 +574,6 @@ def dial_channel(host: str, port: int, cid: int, role: str,
         except OSError:
             pass
         raise ChannelClosed(f"tcp dial failed: {e}") from e
-    ch = TcpChannel(capacity)
     if role == "send":
         ch._open_send_side(sock)
         ch._attached.set()

@@ -16,10 +16,10 @@ that socket:
   configuration step: architecture spec + weights arrive over the wire
   (``NodePlan`` framing, same bytes a live repartition ships) and the
   node materializes its partition.
-* ``"precompile"`` / ``"start"`` / ``"knobs"`` / ``"reset_stats"`` —
-  lifecycle and tuning, applied in order (the loop is serial, so a
-  ``"start"`` can never overtake the config that precedes it).  After
-  ``"start"`` the worker acks ``"ready"`` and begins heartbeating.
+* ``"precompile"`` / ``"start"`` / ``"knobs"`` — lifecycle and tuning,
+  applied in order (the loop is serial, so a ``"start"`` can never
+  overtake the config that precedes it).  After ``"start"`` the worker
+  acks ``"ready"`` and begins heartbeating.
 * ``"chaos"`` — fault injection (hang the compute stage), honored only
   when the process was launched with ``--chaos``; production spawns
   ignore it.
@@ -102,21 +102,34 @@ class Worker:
         codec = WireCodec(ser, comp, zfp_rate=rate, vectorized=vec,
                           small_bypass=bypass)
         host, port = p["host"], p["port"]
-        inbox = dial_channel(host, port, p["in_cid"], role="recv",
-                             capacity=p["in_capacity"])
-        out = dial_channel(host, port, p["out_cid"], role="send",
-                           capacity=p["out_capacity"])
         self._stage = p["stage"]
         self._hb_interval_s = float(p.get("heartbeat_s", 0.5))
-        node = ComputeNode(
-            p["stage"], codec, replica=p["replica"],
-            max_batch=p["max_batch"], staged=p.get("staged", True),
-            shape_buckets=p.get("shape_buckets", "exact"),
-            max_batch_cap=p.get("max_batch_cap"),
-            session_capacity=p.get("session_capacity", 64) or 64,
-            inbox=inbox)
-        node.coalesce_s = float(p["coalesce_s"])
-        node.next_inbox = out
+        inbox = dial_channel(host, port, p["in_cid"], role="recv",
+                             capacity=p["in_capacity"])
+        try:
+            out = dial_channel(host, port, p["out_cid"], role="send",
+                               capacity=p["out_capacity"])
+        except BaseException:
+            # the second dial failed: the first socket must not outlive
+            # the config attempt (the supervisor will tear down and
+            # respawn; a dangling dialed channel would hold its accept
+            # slot forever)
+            inbox.close()
+            raise
+        try:
+            node = ComputeNode(
+                p["stage"], codec, replica=p["replica"],
+                max_batch=p["max_batch"], staged=p.get("staged", True),
+                shape_buckets=p.get("shape_buckets", "exact"),
+                max_batch_cap=p.get("max_batch_cap"),
+                session_capacity=p.get("session_capacity", 64) or 64,
+                inbox=inbox)
+            node.coalesce_s = float(p["coalesce_s"])
+            node.next_inbox = out
+        except BaseException:
+            inbox.close()
+            out.close()
+            raise
         self._node = node
 
     def _on_knobs(self, p: dict) -> None:
@@ -210,9 +223,7 @@ class Worker:
                 self._on_start()
             elif item.kind == "knobs":
                 self._on_knobs(item.payload)
-            elif item.kind == "reset_stats":
-                self._node.reset_stats()
-            elif item.kind == "chaos":
+            elif item.kind == "chaos":  # deferlint: control-verb(sent by the tools/chaos.py harness, not the supervisor)
                 self._on_chaos(item.payload)
 
 
@@ -230,14 +241,19 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
     host, _, port = args.connect.rpartition(":")
     sock = socket.create_connection((host, int(port)), timeout=10.0)
-    # the timeout covers CONNECTING only: left on the socket it would turn
-    # any 10s-quiet control stream into a TimeoutError in the recv loop —
-    # read as "supervisor died", exiting a perfectly healthy worker
-    sock.settimeout(None)
-    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-    worker = Worker(sock, allow_chaos=args.chaos)
-    send_framed(sock, ControlFrame(
-        "hello", {"token": args.token, "pid": os.getpid()}))
+    try:
+        # the timeout covers CONNECTING only: left on the socket it would
+        # turn any 10s-quiet control stream into a TimeoutError in the recv
+        # loop — read as "supervisor died", exiting a perfectly healthy
+        # worker
+        sock.settimeout(None)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        worker = Worker(sock, allow_chaos=args.chaos)
+        send_framed(sock, ControlFrame(
+            "hello", {"token": args.token, "pid": os.getpid()}))
+    except BaseException:
+        sock.close()
+        raise
     return worker.run()
 
 

@@ -2,13 +2,15 @@
 passing twin, asserting rule id and line number, plus the repo-is-clean
 gate and unit tests for the runtime lockdep registry."""
 
+import json
 import os
+import re
 import textwrap
 import threading
 
 import pytest
 
-from tools.deferlint import lint_paths, main
+from tools.deferlint import RULE_CATALOG, lint_paths, main
 from tools.deferlint.lockdep import Registry, running_nondaemon_threads
 
 
@@ -19,6 +21,16 @@ def _lint_snippet(tmp_path, source, reldir="runtime"):
     d.mkdir(parents=True, exist_ok=True)
     mod = d / "mod.py"
     mod.write_text(textwrap.dedent(source))
+    return lint_paths([str(tmp_path / "pkg")])
+
+
+def _lint_files(tmp_path, files):
+    """Write several modules (relpath -> source) under pkg/ and lint the
+    tree — for rules that correlate across modules (DL603/DL604)."""
+    for rel, src in files.items():
+        p = tmp_path / "pkg" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
     return lint_paths([str(tmp_path / "pkg")])
 
 
@@ -424,6 +436,290 @@ def test_dl501_int_tag_untouched(tmp_path):
     assert not [v for v in vs if v.rule == "DL501"]
 
 
+# -- DL601: future-resolution completeness (flow-sensitive) -------------------
+
+def test_dl601_violation(tmp_path):
+    # the except arm swallows and falls through: the dequeued future is
+    # never resolved on that path — exactly PR 4/5/7's hang class
+    vs = _lint_snippet(tmp_path, """\
+        def flush(pending_futures, batch):
+            fut = pending_futures.pop(batch, None)
+            if fut is None:
+                return
+            try:
+                value = compute(batch)
+            except Exception:
+                log("compute failed")
+                return
+            fut.set_result(value)
+        """)
+    assert ("DL601", 2) in _rules_at(vs)
+
+
+def test_dl601_passing_twin(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def flush(pending_futures, batch):
+            fut = pending_futures.pop(batch, None)
+            if fut is None:
+                return
+            try:
+                value = compute(batch)
+            except Exception as e:
+                fut.set_exception(e)
+                return
+            fut.set_result(value)
+        """)
+    assert not [v for v in vs if v.rule == "DL601"]
+
+
+def test_dl601_sink_handoff_passes(tmp_path):
+    # storing the new future into a tracked pending map discharges it,
+    # and a raise before the store leaves the caller owning the request
+    vs = _lint_snippet(tmp_path, """\
+        from concurrent.futures import Future
+
+        class Dispatcher:
+            def submit(self, rid, item):
+                fut = Future()
+                if self._closed:
+                    raise RuntimeError("closed")
+                self._futures[rid] = fut
+                return fut
+        """)
+    assert not [v for v in vs if v.rule == "DL601"]
+
+
+# -- DL602: channel/resource lifecycle (flow-sensitive) -----------------------
+
+def test_dl602_violation(tmp_path):
+    # if the second channel() raises, the first leaks: no close on the
+    # exception path and no hand-off before it
+    vs = _lint_snippet(tmp_path, """\
+        def open_pair(transport, capacity):
+            a = transport.channel(capacity)
+            b = transport.channel(capacity)
+            return a, b
+        """)
+    assert ("DL602", 2) in _rules_at(vs)
+    assert ("DL602", 3) not in _rules_at(vs)
+
+
+def test_dl602_passing_twin(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def open_pair(transport, capacity):
+            a = transport.channel(capacity)
+            try:
+                b = transport.channel(capacity)
+            except BaseException:
+                a.close()
+                raise
+            return a, b
+        """)
+    assert not [v for v in vs if v.rule == "DL602"]
+
+
+def test_dl602_none_guard_cleanup_passes(tmp_path):
+    # the transport.channel() idiom: close under `if sock is not None`
+    # in the handler — requires the None-aware branch pruning
+    vs = _lint_snippet(tmp_path, """\
+        import socket
+
+        def connect(addr):
+            sock = None
+            try:
+                sock = socket.create_connection(addr)
+                verify_peer(addr)
+            except Exception as e:
+                if sock is not None:
+                    sock.close()
+                raise ChannelClosed("dial failed") from e
+            return sock
+        """)
+    assert not [v for v in vs if v.rule == "DL602"]
+
+
+def test_dl602_suppression_tag(tmp_path):
+    vs = _lint_snippet(tmp_path, """\
+        def adopt(transport):
+            ch = transport.channel(4)  # deferlint: resolved-by(registry weakref)
+            register(id(ch))
+        """)
+    assert not [v for v in vs if v.rule == "DL602"]
+
+
+# -- DL603: wire-tag exhaustiveness -------------------------------------------
+
+_WIRE_FIXTURE = """\
+    K_PLAIN = 0
+    K_OPEN = 1
+    K_STEP = 2
+    K_CLOSE = 3
+"""
+
+
+def test_dl603_violation(tmp_path):
+    vs = _lint_files(tmp_path, {
+        "runtime/wire.py": _WIRE_FIXTURE,
+        "runtime/mod.py": """\
+            from pkg.runtime.wire import K_CLOSE, K_OPEN, K_PLAIN, K_STEP
+
+            def route(e):
+                if e.kind == K_PLAIN:
+                    return handle_plain(e)
+                elif e.kind == K_OPEN:
+                    return handle_open(e)
+                elif e.kind == K_STEP:
+                    return handle_step(e)
+            """,
+    })
+    dl603 = [(v.rule, v.line) for v in vs if v.path.endswith("mod.py")]
+    assert ("DL603", 4) in dl603
+
+
+def test_dl603_passing_catchall_twin(tmp_path):
+    vs = _lint_files(tmp_path, {
+        "runtime/wire.py": _WIRE_FIXTURE,
+        "runtime/mod.py": """\
+            from pkg.runtime.wire import K_OPEN, K_STEP
+
+            def route(e):
+                if e.kind == K_OPEN:
+                    return handle_open(e)
+                elif e.kind == K_STEP:
+                    return handle_step(e)
+                else:
+                    raise WireFormatError(f"unknown kind {e.kind}")
+            """,
+    })
+    assert not [v for v in vs if v.rule == "DL603"]
+
+
+def test_dl603_single_test_is_not_a_chain(tmp_path):
+    # routing code that peels one kind off and forwards the rest is not
+    # a dispatch chain — router.route's standalone membership tests
+    vs = _lint_files(tmp_path, {
+        "runtime/wire.py": _WIRE_FIXTURE,
+        "runtime/mod.py": """\
+            from pkg.runtime.wire import K_CLOSE, K_OPEN, K_STEP
+
+            def route(e, ledger):
+                if e.kind == K_CLOSE:
+                    ledger.evict(e)
+                forward(e)
+                if e.kind in (K_OPEN, K_STEP):
+                    ledger.track(e)
+            """,
+    })
+    assert not [v for v in vs if v.rule == "DL603"]
+
+
+_DISPATCH_FIXTURE = """\
+    from pkg.runtime.wire import K_CLOSE, K_OPEN, K_PLAIN, K_STEP
+
+    def route(e):
+        if e.kind == K_PLAIN:
+            return 0
+        elif e.kind == K_OPEN:
+            return 1
+        elif e.kind == K_STEP:
+            return 2
+        elif e.kind == K_CLOSE:
+            return 3
+    """
+
+
+def test_dl603_mutation_gate_fires(tmp_path):
+    # the exhaustiveness self-test: the full dispatch is clean because it
+    # enumerates every K_* member; deleting the K_STEP arm must trip DL603
+    full = textwrap.dedent(_DISPATCH_FIXTURE)
+    vs = _lint_files(tmp_path, {"runtime/wire.py": _WIRE_FIXTURE,
+                                "runtime/mod.py": full})
+    assert not [v for v in vs if v.rule == "DL603"]
+
+    mutated = full.replace(
+        "    elif e.kind == K_STEP:\n        return 2\n", "")
+    assert mutated != full
+    vs = _lint_files(tmp_path, {"runtime/wire.py": _WIRE_FIXTURE,
+                                "runtime/mod.py": mutated})
+    dl603 = [v for v in vs if v.rule == "DL603"]
+    assert dl603 and "K_STEP" in dl603[0].message
+
+
+# -- DL604: supervisor <-> worker control-verb drift --------------------------
+
+def test_dl604_violation_both_directions(tmp_path):
+    vs = _lint_files(tmp_path, {
+        "runtime/supervisor.py": """\
+            def push(handle):
+                handle.send(ControlFrame("config", {}))
+                handle.send(ControlFrame("flush", {}))
+            """,
+        "runtime/worker.py": """\
+            def run(item):
+                if item.kind == "config":
+                    return 1
+                if item.kind == "zap":
+                    return 2
+            """,
+    })
+    dl604 = [(v.path.rsplit("/", 1)[-1], v.line)
+             for v in vs if v.rule == "DL604"]
+    assert ("supervisor.py", 3) in dl604   # sends "flush", never handled
+    assert ("worker.py", 4) in dl604       # handles "zap", never sent
+
+
+def test_dl604_passing_twin(tmp_path):
+    vs = _lint_files(tmp_path, {
+        "runtime/supervisor.py": """\
+            def push(handle):
+                handle.send(ControlFrame("config", {}))
+
+            def on_frame(frame):
+                if frame.kind == "ready":
+                    return True
+            """,
+        "runtime/worker.py": """\
+            def run(sock, item):
+                if item.kind == "config":
+                    send(sock, ControlFrame("ready", {}))
+            """,
+    })
+    assert not [v for v in vs if v.rule == "DL604"]
+
+
+def test_dl604_suppression_tag(tmp_path):
+    vs = _lint_files(tmp_path, {
+        "runtime/supervisor.py": """\
+            def push(handle):
+                handle.send(ControlFrame("config", {}))
+            """,
+        "runtime/worker.py": """\
+            def run(item):
+                if item.kind == "config":
+                    return 1
+                if item.kind == "chaos":  # deferlint: control-verb(test harness only)
+                    return 2
+            """,
+    })
+    assert not [v for v in vs if v.rule == "DL604"]
+
+
+# -- the rule catalog is derived from the registry ----------------------------
+
+def test_rule_catalog_matches_registry():
+    from tools.deferlint.core import _CHECKERS
+    declared = {}
+    for _name, _fn, rules in _CHECKERS:
+        assert rules, f"checker {_name!r} declares no rules"
+        declared.update(rules)
+    assert declared == RULE_CATALOG
+    assert all(re.fullmatch(r"DL\d{3}", rid) for rid in RULE_CATALOG)
+    for rid in ("DL101", "DL102", "DL103", "DL201", "DL301", "DL302",
+                "DL303", "DL304", "DL401", "DL501", "DL601", "DL602",
+                "DL603", "DL604"):
+        assert RULE_CATALOG.get(rid), f"missing catalog row for {rid}"
+
+
 # -- the repo itself is clean, and the CLI exit codes are right ---------------
 
 def test_repo_is_clean():
@@ -443,6 +739,32 @@ def test_cli_exit_codes(tmp_path, capsys):
     good.mkdir()
     (good / "m.py").write_text("x = 1\n")
     assert main([str(good)]) == 0
+
+
+def test_cli_json_select_ignore_github(tmp_path, capsys):
+    bad = tmp_path / "runtime"
+    bad.mkdir()
+    (bad / "m.py").write_text("import struct\n(n,) = struct.unpack('<I', b)\n")
+
+    assert main(["--json", str(tmp_path)]) == 1
+    data = json.loads(capsys.readouterr().out)
+    assert [d["rule"] for d in data] == ["DL101"]
+    assert data[0]["line"] == 2
+    assert data[0]["path"].endswith("runtime/m.py")
+
+    assert main(["--select", "DL101", str(tmp_path)]) == 1
+    capsys.readouterr()
+    assert main(["--select=DL999", str(tmp_path)]) == 0
+    capsys.readouterr()
+    assert main(["--ignore", "DL101", str(tmp_path)]) == 0
+    capsys.readouterr()
+
+    assert main(["--github", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=" in out
+    assert "title=deferlint DL101" in out
+
+    assert main(["--bogus"]) == 2
 
 
 # -- runtime lockdep unit tests -----------------------------------------------

@@ -6,3 +6,9 @@ Run: ``python -m tools.deferlint src``
 from tools.deferlint.core import (  # noqa: F401
     RULE_CATALOG, ModuleInfo, Violation, lint_paths, main,
 )
+from tools.deferlint.core import _load_checkers as _load
+
+# populate RULE_CATALOG (same dict object) from the checker registry so
+# `from tools.deferlint import RULE_CATALOG` is complete without a lint run
+_load()
+del _load

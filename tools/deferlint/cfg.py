@@ -1,0 +1,275 @@
+"""Intraprocedural control-flow graphs for deferlint's flow rules.
+
+PR 6's rules are lexical: they look at what a function *mentions*, not at
+which paths it can take.  Every hard bug this repo has shipped, though,
+lived on a *path* — an except arm that dropped a dequeued future, an
+early raise that skipped a channel close.  This module builds the small
+CFG the flow rules (DL601/DL602) walk.
+
+The graph is statement-level: one node per ``ast.stmt``, plus three
+synthetic nodes — ``ENTRY``, ``EXIT`` (a ``return`` or falling off the
+end) and ``RAISE`` (an exception escapes the function).  Edges carry a
+kind tag:
+
+* ``"seq"``   — ordinary fallthrough
+* ``"true"`` / ``"false"`` — the two arms of an ``if``/loop test
+* ``"exc"``   — the statement raised
+
+Exception edges are deliberately scoped: a can-raise statement inside a
+``try`` gets exc edges to the handler entries *only* (an uncaught-type
+escape through a narrow handler is out of scope — modeling it would flag
+every guarded cleanup in the repo).  A can-raise statement outside any
+``try`` gets an exc edge to ``RAISE``.  ``finally`` bodies are threaded
+on the normal path and reachable from exception edges; the
+exception-propagates-after-finally continuation is approximated by a
+direct edge to the outer target (the union over-approximates both real
+paths, which is all the leak query needs).
+
+Two value-sensitivity crumbs keep the common runtime idioms clean
+without a real dataflow lattice, both implemented in :func:`find_leak`:
+
+* ``x = d.pop(k, None)`` followed by ``if x is None:`` — the None arm
+  carries no obligation, so that edge is pruned.
+* rebinding the tracked name kills the obligation (the loop back-edge in
+  ``for ...: x = q.pop(...)`` starts a *new* obligation, analyzed from
+  its own acquisition site).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+ENTRY = 0
+EXIT = 1    # normal exit: return, or falling off the end of the body
+RAISE = 2   # an exception escapes the function
+
+# Method names whose calls are treated as non-raising.  These are the
+# runtime's cleanup/release vocabulary: without the carve-out, a handler
+# that closes two resources in sequence would grow an exc edge out of
+# the first close and the second resource would look leakable.
+_RELEASEY = {
+    "close", "kill", "shutdown", "cancel", "set_result", "set_exception",
+    "unexpect_channel", "pop", "discard", "clear", "release",
+}
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _expr_raises(e: Optional[ast.expr]) -> bool:
+    if e is None:
+        return False
+    for node in ast.walk(e):
+        if isinstance(node, ast.Call) and _call_name(node) not in _RELEASEY:
+            return True
+        if isinstance(node, ast.Subscript):
+            return True
+    return False
+
+
+def _stmt_raises(s: ast.stmt) -> bool:
+    if isinstance(s, ast.Assert):
+        return True
+    for node in ast.walk(s):
+        if isinstance(node, ast.Call) and _call_name(node) not in _RELEASEY:
+            return True
+        if isinstance(node, ast.Subscript):
+            return True
+    return False
+
+
+class CFG:
+    """CFG for one function body.  ``succ[n]`` is ``[(node, kind), ...]``;
+    ``stmt[n]`` maps back to the ``ast.stmt``; ``node_of[id(stmt)]``
+    resolves a statement object to its node.  Nested function bodies are
+    *not* inlined — a nested ``def`` is a single opaque statement here
+    and gets its own CFG when the caller iterates functions."""
+
+    def __init__(self, fn: ast.AST):
+        self.fn = fn
+        self.succ: Dict[int, List[Tuple[int, str]]] = {
+            ENTRY: [], EXIT: [], RAISE: []}
+        self.stmt: Dict[int, ast.stmt] = {}
+        self.node_of: Dict[int, int] = {}
+        self._n = 3
+        body = getattr(fn, "body", [])
+        entry = self._seq(body, EXIT, None, None, (RAISE,))
+        self.succ[ENTRY].append((entry, "seq"))
+
+    # -- construction ----------------------------------------------------------
+    def _new(self, s: ast.stmt) -> int:
+        n = self._n
+        self._n += 1
+        self.stmt[n] = s
+        self.node_of[id(s)] = n
+        self.succ[n] = []
+        return n
+
+    def _edge(self, a: int, b: int, kind: str) -> None:
+        self.succ[a].append((b, kind))
+
+    def _exc(self, n: int, excs: Tuple[int, ...]) -> None:
+        for t in excs:
+            self._edge(n, t, "exc")
+
+    def _seq(self, body: Sequence[ast.stmt], nxt: int,
+             brk: Optional[int], cont: Optional[int],
+             excs: Tuple[int, ...]) -> int:
+        entry = nxt
+        for s in reversed(body):
+            entry = self._stmt(s, entry, brk, cont, excs)
+        return entry
+
+    def _stmt(self, s: ast.stmt, nxt: int, brk: Optional[int],
+              cont: Optional[int], excs: Tuple[int, ...]) -> int:
+        n = self._new(s)
+        if isinstance(s, ast.Return):
+            self._edge(n, EXIT, "seq")
+            if _expr_raises(s.value):
+                self._exc(n, excs)
+        elif isinstance(s, ast.Raise):
+            self._exc(n, excs)
+        elif isinstance(s, ast.Break):
+            self._edge(n, brk if brk is not None else EXIT, "seq")
+        elif isinstance(s, ast.Continue):
+            self._edge(n, cont if cont is not None else EXIT, "seq")
+        elif isinstance(s, ast.If):
+            self._edge(n, self._seq(s.body, nxt, brk, cont, excs), "true")
+            self._edge(n, self._seq(s.orelse, nxt, brk, cont, excs), "false")
+            if _expr_raises(s.test):
+                self._exc(n, excs)
+        elif isinstance(s, ast.While):
+            self._edge(n, self._seq(s.body, n, nxt, n, excs), "true")
+            infinite = isinstance(s.test, ast.Constant) and bool(s.test.value)
+            if not infinite:
+                self._edge(n, self._seq(s.orelse, nxt, brk, cont, excs),
+                           "false")
+            if _expr_raises(s.test):
+                self._exc(n, excs)
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            self._edge(n, self._seq(s.body, n, nxt, n, excs), "true")
+            self._edge(n, self._seq(s.orelse, nxt, brk, cont, excs), "false")
+            if _expr_raises(s.iter):
+                self._exc(n, excs)
+        elif isinstance(s, ast.Try):
+            self._try(n, s, nxt, brk, cont, excs)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            self._edge(n, self._seq(s.body, nxt, brk, cont, excs), "seq")
+            if any(_expr_raises(it.context_expr) for it in s.items):
+                self._exc(n, excs)
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            self._edge(n, nxt, "seq")
+        else:
+            self._edge(n, nxt, "seq")
+            if _stmt_raises(s):
+                self._exc(n, excs)
+        return n
+
+    def _try(self, n: int, s: ast.Try, nxt: int, brk: Optional[int],
+             cont: Optional[int], excs: Tuple[int, ...]) -> None:
+        if s.finalbody:
+            fin = self._seq(s.finalbody, nxt, brk, cont, excs)
+            after = fin
+            outer = (fin,) + tuple(excs)
+        else:
+            after = nxt
+            outer = tuple(excs)
+        handler_entries = tuple(
+            self._seq(h.body, after, brk, cont, outer) for h in s.handlers)
+        body_tail = (self._seq(s.orelse, after, brk, cont, outer)
+                     if s.orelse else after)
+        body_exc = handler_entries if handler_entries else outer
+        self._edge(n, self._seq(s.body, body_tail, brk, cont, body_exc),
+                   "seq")
+
+
+def _rebinds(s: ast.stmt, name: str) -> bool:
+    """Does this statement rebind ``name``?  A rebind ends the tracked
+    obligation (the new value gets its own analysis from its own site)."""
+    targets: List[ast.expr] = []
+    if isinstance(s, ast.Assign):
+        targets = list(s.targets)
+    elif isinstance(s, (ast.AnnAssign, ast.AugAssign)):
+        targets = [s.target]
+    elif isinstance(s, (ast.For, ast.AsyncFor)):
+        targets = [s.target]
+    elif isinstance(s, (ast.With, ast.AsyncWith)):
+        targets = [it.optional_vars for it in s.items if it.optional_vars]
+    for t in targets:
+        for node in ast.walk(t):
+            if isinstance(node, ast.Name) and node.id == name:
+                return True
+    return False
+
+
+def _none_polarity(test: ast.expr, name: str) -> Optional[str]:
+    """Which arm of ``if <test>:`` means ``name is None``?  Returns
+    ``"true"``, ``"false"``, or None when the test says nothing about
+    ``name``'s None-ness."""
+    if isinstance(test, ast.Compare) and len(test.ops) == 1:
+        left, right = test.left, test.comparators[0]
+        if (isinstance(left, ast.Name) and left.id == name
+                and isinstance(right, ast.Constant) and right.value is None):
+            if isinstance(test.ops[0], ast.Is):
+                return "true"
+            if isinstance(test.ops[0], ast.IsNot):
+                return "false"
+    if (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)
+            and isinstance(test.operand, ast.Name)
+            and test.operand.id == name):
+        return "true"
+    if isinstance(test, ast.Name) and test.id == name:
+        return "false"
+    return None
+
+
+def find_leak(cfg: CFG, acquisition: ast.stmt, name: str,
+              is_release: Callable[[ast.stmt, str], bool],
+              raise_is_leak: bool) -> Optional[str]:
+    """Walk forward from ``acquisition`` looking for a path on which the
+    obligation on ``name`` is never discharged.  ``is_release(stmt,
+    name)`` decides whether a statement discharges it (a release call, a
+    hand-off into a tracked sink, a return).  Returns a short description
+    of the leaking exit, or None when every path discharges.
+
+    Exploration stops at a releasing statement *before* following its
+    out-edges ("absorb on visit"): storing the resource into a registry
+    discharges even though the store itself could raise afterwards.
+    Exception edges out of the acquisition statement itself are skipped —
+    if the acquiring call raised, nothing was ever bound."""
+    start = cfg.node_of.get(id(acquisition))
+    if start is None:
+        return None
+    stack = [dst for dst, kind in cfg.succ.get(start, ()) if kind != "exc"]
+    seen = set()
+    while stack:
+        node = stack.pop()
+        if node == EXIT:
+            return "reaches a normal exit"
+        if node == RAISE:
+            if raise_is_leak:
+                return "escapes on an exception path"
+            continue
+        if node in seen:
+            continue
+        seen.add(node)
+        s = cfg.stmt[node]
+        if _rebinds(s, name):
+            continue
+        if is_release(s, name):
+            continue
+        polarity = (_none_polarity(s.test, name)
+                    if isinstance(s, ast.If) else None)
+        for dst, kind in cfg.succ.get(node, ()):
+            if polarity is not None and kind == polarity:
+                continue    # this edge means `name is None`: no obligation
+            stack.append(dst)
+    return None

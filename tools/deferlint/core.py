@@ -14,11 +14,18 @@ invariant genuinely does not apply here"):
 * ``# deferlint: swallow(<reason>)`` on the ``except`` line — DL401 only.
 * An ``ALLOWLIST`` entry keyed by (path suffix, qualname) — DL101 only,
   reserved for codec internals whose callers already wrap decode errors.
+* ``# deferlint: resolved-by(<owner>)`` on an acquisition/dispatch line —
+  the flow rules (DL601/DL602/DL603), for ownership transfers the CFG
+  walk cannot see.
+* ``# deferlint: control-verb(<reason>)`` — DL604, for a deliberate
+  supervisor/worker verb asymmetry (e.g. a verb only a test harness
+  sends).
 """
 
 from __future__ import annotations
 
 import ast
+import json
 import os
 import sys
 from dataclasses import dataclass, field
@@ -47,6 +54,13 @@ class ModuleInfo:
     def in_runtime(self) -> bool:
         return "/runtime/" in "/" + self.relpath.replace(os.sep, "/")
 
+    @property
+    def in_toolchain(self) -> bool:
+        """tools/ and benchmarks/ — self-linted with the hygiene rules
+        (DL102/DL401/DL501) but exempt from runtime-only rules."""
+        p = "/" + self.relpath.replace(os.sep, "/")
+        return "/tools/" in p or "/benchmarks/" in p
+
     def line(self, lineno: int) -> str:
         if 1 <= lineno <= len(self.source_lines):
             return self.source_lines[lineno - 1]
@@ -54,14 +68,29 @@ class ModuleInfo:
 
 
 CheckerFn = Callable[[List[ModuleInfo]], Iterable[Violation]]
-_CHECKERS: List[Tuple[str, CheckerFn]] = []
+_CHECKERS: List[Tuple[str, CheckerFn, Dict[str, str]]] = []
+
+# rule id -> one-line description, assembled from the ``rules=`` each
+# checker declares at registration (so --help can never drift from what
+# is actually enforced).  Populated once the checker modules import.
+RULE_CATALOG: Dict[str, str] = {}
 
 
-def checker(name: str) -> Callable[[CheckerFn], CheckerFn]:
+def checker(name: str, rules: Optional[Dict[str, str]] = None,
+            ) -> Callable[[CheckerFn], CheckerFn]:
     def wrap(fn: CheckerFn) -> CheckerFn:
-        _CHECKERS.append((name, fn))
+        _CHECKERS.append((name, fn, dict(rules or {})))
+        RULE_CATALOG.update(rules or {})
         return fn
     return wrap
+
+
+def _load_checkers() -> None:
+    """Checker modules register themselves (and their catalog rows) on
+    import."""
+    from tools.deferlint import (  # noqa: F401
+        flow, hygiene, locks, procs, protocol, threads, tokens, wire_safety,
+    )
 
 
 def iter_functions(tree: ast.AST):
@@ -136,44 +165,88 @@ def collect_modules(paths: Sequence[str]) -> List[ModuleInfo]:
 
 def lint_paths(paths: Sequence[str]) -> List[Violation]:
     mods = collect_modules(paths)
-    # checker modules register themselves on import
-    from tools.deferlint import (  # noqa: F401
-        hygiene, locks, procs, threads, tokens, wire_safety,
-    )
+    _load_checkers()
     out: List[Violation] = []
-    for _name, fn in _CHECKERS:
+    for _name, fn, _rules in _CHECKERS:
         out.extend(fn(mods))
     out.sort(key=lambda v: (v.path, v.line, v.rule))
     return out
 
 
-RULE_CATALOG = {
-    "DL101": "struct.unpack/unpack_from not behind wire._checked (allowlist: core/codecs.py internals only)",
-    "DL102": "pickle/marshal import or eval/exec call inside runtime/",
-    "DL103": "time.time() inside runtime/ (deadlines/backoff must use time.monotonic or perf_counter)",
-    "DL201": "cycle in the static lock-acquisition graph across runtime/",
-    "DL301": "threading.Thread neither daemon=True nor joined in a shutdown path",
-    "DL302": "blocking get()/recv() loop with no stop-token path, or unbounded join outside shutdown",
-    "DL303": "time.sleep outside the LinkChannel rate shaper",
-    "DL304": "subprocess/multiprocessing child never reaped (no wait/terminate/kill on any shutdown path)",
-    "DL401": "except Exception that neither re-raises, resolves a future/error envelope, nor carries a swallow tag",
-    "DL501": "stop/fence singleton compared with ==/!= instead of is/is not",
-}
+def _usage(file=sys.stdout) -> None:
+    print("usage: python -m tools.deferlint [--json] [--github] "
+          "[--select DLxxx[,...]] [--ignore DLxxx[,...]] "
+          "<path> [<path> ...]", file=file)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if not argv or argv[0] in ("-h", "--help"):
-        print("usage: python -m tools.deferlint <path> [<path> ...]")
+        _load_checkers()
+        _usage()
         print("\nrules:")
         for rid, desc in sorted(RULE_CATALOG.items()):
             print(f"  {rid}  {desc}")
         return 0 if argv else 2
-    violations = lint_paths(argv)
-    for v in violations:
-        print(v.format())
+    as_json = as_github = False
+    select: set = set()
+    ignore: set = set()
+    paths: List[str] = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--json":
+            as_json = True
+        elif a == "--github":
+            as_github = True
+        elif a in ("--select", "--ignore") or a.startswith(("--select=",
+                                                           "--ignore=")):
+            if "=" in a:
+                opt, _, val = a.partition("=")
+            else:
+                opt = a
+                i += 1
+                if i >= len(argv):
+                    print(f"deferlint: {opt} needs an argument",
+                          file=sys.stderr)
+                    return 2
+                val = argv[i]
+            rids = {r.strip().upper() for r in val.split(",") if r.strip()}
+            (select if opt == "--select" else ignore).update(rids)
+        elif a.startswith("-"):
+            print(f"deferlint: unknown option {a!r}", file=sys.stderr)
+            _usage(file=sys.stderr)
+            return 2
+        else:
+            paths.append(a)
+        i += 1
+    if not paths:
+        _usage(file=sys.stderr)
+        return 2
+    violations = lint_paths(paths)
+    if select:
+        violations = [v for v in violations if v.rule in select]
+    if ignore:
+        violations = [v for v in violations if v.rule not in ignore]
+    if as_json:
+        print(json.dumps([{"rule": v.rule, "path": v.path, "line": v.line,
+                           "message": v.message} for v in violations],
+                         indent=2))
+    else:
+        for v in violations:
+            print(v.format())
+    if as_github:
+        # workflow-command annotations: GitHub renders these inline on the
+        # PR diff.  Paths are relative to the lint root's parent, which is
+        # the repo root when CI runs `python -m tools.deferlint src ...`.
+        for v in violations:
+            print(f"::error file={v.path},line={v.line},"
+                  f"title=deferlint {v.rule}::{v.message}")
     if violations:
-        print(f"deferlint: {len(violations)} violation(s)", file=sys.stderr)
+        if not as_json:
+            print(f"deferlint: {len(violations)} violation(s)",
+                  file=sys.stderr)
         return 1
-    print("deferlint: clean")
+    if not as_json:
+        print("deferlint: clean")
     return 0

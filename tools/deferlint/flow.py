@@ -1,0 +1,220 @@
+"""DL601/DL602 — flow-sensitive future-resolution and resource lifecycle.
+
+Both rules walk the :mod:`tools.deferlint.cfg` graph from each
+acquisition site and demand that every path discharges the obligation:
+
+DL601: a ``runtime/`` function that creates a ``Future()`` or dequeues
+one from a futures container (``*.pop``/``popleft``/... on a receiver
+whose name mentions ``futur``) must, on every path that completes
+normally, resolve it (``set_result``/``set_exception``/``cancel``), pass
+it to a call (the sequenced-merge resolver, a fan-out helper), store it
+into a tracked sink (pending map, retention ledger, hold buffer), or
+return it.  Paths that *raise* are acceptable — the caller still owns
+whatever registered the future — but an ``except`` arm that swallows and
+falls through without resolving is exactly the bug class this rule
+exists for.
+
+DL602: every channel/socket/session-store acquisition
+(``transport.channel(...)``, ``expect_channel``, ``dial_channel``,
+``socket.socket``/``create_connection``/``accept``, ``SessionStore``)
+must reach a release (``close``/``kill``/``shutdown``/...), a hand-off
+(call argument, store into an owner attribute/registry, return) on
+**all** exits — including exception paths: an early raise that skips the
+close is a leak, because unlike a future there is no caller-side
+registration to fall back on.
+
+Suppression (the bar is "a reviewer agreed ownership is genuinely
+transferred in a way the analysis cannot see"): ``# deferlint:
+resolved-by(<owner>)`` on the acquisition line.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional
+
+from tools.deferlint.cfg import CFG, find_leak
+from tools.deferlint.core import (
+    ModuleInfo, Violation, checker, iter_functions,
+)
+
+RESOLVED_RE = re.compile(r"#\s*deferlint:\s*resolved-by\(([^)]+)\)")
+
+_FUTURE_CONTAINER = re.compile(r"futur", re.IGNORECASE)
+_DEQUEUE_METHODS = {"pop", "popleft", "popitem", "get_nowait"}
+_FUT_RESOLVE = {"set_result", "set_exception", "cancel"}
+
+_RES_RELEASE = {"close", "kill", "shutdown", "detach", "stop", "release"}
+_RES_ACQ_FUNCS = {"channel", "expect_channel", "dial_channel",
+                  "create_connection", "accept", "SessionStore"}
+
+_COMPOUND = (ast.If, ast.While, ast.For, ast.AsyncFor, ast.With,
+             ast.AsyncWith, ast.Try, ast.FunctionDef, ast.AsyncFunctionDef,
+             ast.ClassDef)
+
+
+def _contains_name(node: Optional[ast.AST], name: str) -> bool:
+    if node is None:
+        return False
+    return any(isinstance(n, ast.Name) and n.id == name
+               for n in ast.walk(node))
+
+
+def _name_in_args(call: ast.Call, name: str) -> bool:
+    for a in call.args:
+        if _contains_name(a, name):
+            return True
+    for kw in call.keywords:
+        if _contains_name(kw.value, name):
+            return True
+    return False
+
+
+def _handed_off(s: ast.stmt, name: str, methods: set) -> bool:
+    """Shared discharge predicate: a method-on-name call from ``methods``,
+    name passed to any call, name stored through an attribute/subscript
+    target or aliased, or name returned/yielded/raised."""
+    if isinstance(s, _COMPOUND):
+        # compound statements' bodies are their own CFG nodes; the header
+        # expression (a test / iterable) never discharges an obligation
+        return False
+    for node in ast.walk(s):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr in methods
+                    and isinstance(f.value, ast.Name) and f.value.id == name):
+                return True
+            if _name_in_args(node, name):
+                return True
+    if isinstance(s, ast.Assign) and _contains_name(s.value, name):
+        # a store into an attribute/subscript is a sink; an alias to
+        # another local transfers the obligation (optimistic — flagging
+        # aliases would make every hand-off pattern a false positive)
+        return True
+    if isinstance(s, ast.Return) and _contains_name(s.value, name):
+        return True
+    if (isinstance(s, ast.Expr)
+            and isinstance(s.value, (ast.Yield, ast.YieldFrom))
+            and _contains_name(s.value, name)):
+        return True
+    if isinstance(s, ast.Raise) and _contains_name(s, name):
+        return True
+    return False
+
+
+def _bound_name(s: ast.stmt, allow_tuple: bool) -> Optional[str]:
+    """The plain local this assignment binds, or the first element of a
+    tuple target when ``allow_tuple`` (``ch, cid = expect_channel(...)``).
+    Attribute/subscript targets are direct sinks, not acquisitions."""
+    if isinstance(s, ast.Assign) and len(s.targets) == 1:
+        t = s.targets[0]
+    elif isinstance(s, ast.AnnAssign):
+        t = s.target
+    else:
+        return None
+    if isinstance(t, ast.Name):
+        return t.id
+    if (allow_tuple and isinstance(t, ast.Tuple) and t.elts
+            and isinstance(t.elts[0], ast.Name)):
+        return t.elts[0].id
+    return None
+
+
+def _call_value(s: ast.stmt) -> Optional[ast.Call]:
+    v = s.value if isinstance(s, (ast.Assign, ast.AnnAssign)) else None
+    return v if isinstance(v, ast.Call) else None
+
+
+# -- DL601 ---------------------------------------------------------------------
+
+def _future_acquisition(s: ast.stmt) -> Optional[str]:
+    name = _bound_name(s, allow_tuple=False)
+    call = _call_value(s)
+    if name is None or call is None:
+        return None
+    f = call.func
+    ctor = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    if ctor == "Future":
+        return name
+    if (isinstance(f, ast.Attribute) and f.attr in _DEQUEUE_METHODS
+            and any(isinstance(n, (ast.Name, ast.Attribute))
+                    and _FUTURE_CONTAINER.search(
+                        n.id if isinstance(n, ast.Name) else n.attr)
+                    for n in ast.walk(f.value))):
+        return name
+    return None
+
+
+def _future_released(s: ast.stmt, name: str) -> bool:
+    return _handed_off(s, name, _FUT_RESOLVE)
+
+
+# -- DL602 ---------------------------------------------------------------------
+
+def _resource_acquisition(s: ast.stmt) -> Optional[str]:
+    name = _bound_name(s, allow_tuple=True)
+    call = _call_value(s)
+    if name is None or call is None:
+        return None
+    f = call.func
+    fname = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    if fname in _RES_ACQ_FUNCS:
+        return name
+    if (isinstance(f, ast.Attribute) and f.attr == "socket"
+            and isinstance(f.value, ast.Name) and f.value.id == "socket"):
+        return name
+    return None
+
+
+def _resource_released(s: ast.stmt, name: str) -> bool:
+    return _handed_off(s, name, _RES_RELEASE)
+
+
+# -- the checker ---------------------------------------------------------------
+
+@checker("flow", rules={
+    "DL601": "future created/dequeued in runtime/ can complete a path "
+             "unresolved (no set_result/set_exception, sink hand-off, or "
+             "return on every normal exit)",
+    "DL602": "channel/socket/SessionStore acquisition in runtime/ can exit "
+             "(normally or by raising) without close()/hand-off to a "
+             "shutdown owner",
+})
+def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    for mi in mods:
+        if not mi.in_runtime:
+            continue
+        for qn, fn in iter_functions(mi.tree):
+            cfg = CFG(fn)
+            for s in list(cfg.stmt.values()):
+                fut = _future_acquisition(s)
+                if fut is not None \
+                        and not RESOLVED_RE.search(mi.line(s.lineno)):
+                    why = find_leak(cfg, s, fut, _future_released,
+                                    raise_is_leak=False)
+                    if why:
+                        yield Violation(
+                            "DL601", mi.relpath, s.lineno,
+                            f"future {fut!r} in {qn} {why} without being "
+                            "resolved, handed to a tracked sink, or "
+                            "returned (suppress with '# deferlint: "
+                            "resolved-by(<owner>)' if ownership is "
+                            "transferred invisibly)",
+                        )
+                res = _resource_acquisition(s)
+                if res is not None \
+                        and not RESOLVED_RE.search(mi.line(s.lineno)):
+                    why = find_leak(cfg, s, res, _resource_released,
+                                    raise_is_leak=True)
+                    if why:
+                        yield Violation(
+                            "DL602", mi.relpath, s.lineno,
+                            f"resource {res!r} in {qn} {why} without "
+                            "close()/hand-off to a shutdown owner "
+                            "(suppress with '# deferlint: "
+                            "resolved-by(<owner>)' if ownership is "
+                            "transferred invisibly)",
+                        )

@@ -1,4 +1,4 @@
-"""DL401 — exception hygiene in runtime/.
+"""DL401 — exception hygiene in runtime/ and the tools/benchmarks toolchain.
 
 Every ``except Exception:`` (or broader: bare ``except:`` /
 ``except BaseException:``) must do one of:
@@ -65,10 +65,13 @@ def _handler_ok(handler: ast.ExceptHandler) -> bool:
     return False
 
 
-@checker("exception-hygiene")
+@checker("exception-hygiene", rules={
+    "DL401": "except Exception that neither re-raises, resolves a "
+             "future/error envelope, nor carries a swallow tag",
+})
 def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
     for mi in mods:
-        if not mi.in_runtime:
+        if not (mi.in_runtime or mi.in_toolchain):
             continue
         encl = enclosing_function_map(mi.tree)
         for node in ast.walk(mi.tree):

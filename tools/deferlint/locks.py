@@ -95,7 +95,9 @@ def _method_class(fn_qualname: str) -> Optional[str]:
     return parts[0] if len(parts) >= 2 else None
 
 
-@checker("lock-discipline")
+@checker("lock-discipline", rules={
+    "DL201": "cycle in the static lock-acquisition graph across runtime/",
+})
 def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
     rt = [m for m in mods if m.in_runtime]
     if not rt:

@@ -46,7 +46,10 @@ def _assigned_attr(fn: ast.AST, call: ast.Call) -> Optional[str]:
     return None
 
 
-@checker("process-discipline")
+@checker("process-discipline", rules={
+    "DL304": "subprocess/multiprocessing child never reaped (no "
+             "wait/terminate/kill on any shutdown path)",
+})
 def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
     rt = [m for m in mods if m.in_runtime]
     if not rt:

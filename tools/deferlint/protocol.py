@@ -1,0 +1,366 @@
+"""DL603/DL604 — wire-protocol drift.
+
+DL603 (wire-tag exhaustiveness): the tag universes are harvested from
+``runtime/wire.py`` — module-level ``_F_*`` frame types, ``K_*`` extent
+kinds, and the ``_COMPAT_VERSIONS`` tuple.  Every *dispatch chain* over
+one of those universes anywhere in ``runtime/`` must handle all members
+or end in a catch-all else that raises / relays a ``WireFormatError``
+(or builds an error envelope).  A dispatch chain is either an
+``if/elif`` ladder with >= 2 arms testing the same subject against
+universe members, or a run of >= 2 consecutive sibling ``if`` statements
+with terminal bodies (return/raise/continue/break) doing the same.
+Single scattered membership tests are not chains — routing code that
+peels one kind off and forwards the rest is fine.  The point: the next
+wire bump cannot silently skip ``node.py`` or ``unframe_compat``.
+
+DL604 (control-protocol drift): the set of ``ControlFrame`` verbs
+``supervisor.py`` sends must equal the set ``worker.py``'s control loop
+handles, and vice versa (acks/heartbeats flow worker -> supervisor).  A
+verb sent but never handled is a silent no-op; a verb handled but never
+sent is a dead arm that rots.  Suppress a deliberate asymmetry with
+``# deferlint: control-verb(<reason>)`` on the anchor line.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from tools.deferlint.core import (
+    ModuleInfo, Violation, checker, enclosing_function_map,
+)
+from tools.deferlint.flow import RESOLVED_RE
+
+CONTROL_RE = re.compile(r"#\s*deferlint:\s*control-verb\(([^)]+)\)")
+
+_FRAME_RE = re.compile(r"_F_[A-Z_]+\Z")
+_KIND_RE = re.compile(r"K_[A-Z_]+\Z")
+_VERSIONISH = re.compile(r"version", re.IGNORECASE)
+
+
+# -- universe harvest ----------------------------------------------------------
+
+def _harvest_universes(mods: List[ModuleInfo]) -> Dict[str, Set[str]]:
+    """Tag universes from modules named ``wire.py``: member *names* for
+    the frame/kind universes, stringified ints for the version universe
+    (``_COMPAT_VERSIONS`` with ``FRAME_VERSION`` references resolved)."""
+    frame: Set[str] = set()
+    kind: Set[str] = set()
+    consts: Dict[str, int] = {}
+    compat_elts: List[ast.expr] = []
+    for mi in mods:
+        if not mi.in_runtime or os.path.basename(mi.relpath) != "wire.py":
+            continue
+        for node in mi.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            name = node.targets[0].id
+            v = node.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                consts[name] = v.value
+                if _FRAME_RE.match(name):
+                    frame.add(name)
+                elif _KIND_RE.match(name):
+                    kind.add(name)
+            elif name == "_COMPAT_VERSIONS" and isinstance(v, ast.Tuple):
+                compat_elts = list(v.elts)
+    version: Set[str] = set()
+    for e in compat_elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            version.add(str(e.value))
+        elif isinstance(e, ast.Name) and e.id in consts:
+            version.add(str(consts[e.id]))
+    return {"frame": frame, "kind": kind, "version": version}
+
+
+# -- dispatch-chain detection --------------------------------------------------
+
+def _member(e: ast.expr) -> Optional[str]:
+    if isinstance(e, ast.Name):
+        return e.id
+    if isinstance(e, ast.Attribute):
+        return e.attr
+    return None
+
+
+def _versionish(subject: ast.expr) -> bool:
+    for n in ast.walk(subject):
+        if isinstance(n, ast.Name) and _VERSIONISH.search(n.id):
+            return True
+        if isinstance(n, ast.Attribute) and _VERSIONISH.search(n.attr):
+            return True
+    return False
+
+
+def _match_test(test: ast.expr, universes: Dict[str, Set[str]]):
+    """Classify one branch test as a universe-membership check.  Returns
+    ``(subject_key, members, universe_name)`` or None.  Version members
+    are bare int literals, so they only count when the subject is
+    literally named like a version — anything looser would flag every
+    small-int ladder in the repo."""
+    if not (isinstance(test, ast.Compare) and len(test.ops) == 1):
+        return None
+    op = test.ops[0]
+    left, right = test.left, test.comparators[0]
+    if isinstance(op, ast.Eq):
+        for subj, memb in ((left, right), (right, left)):
+            m = _member(memb)
+            for uni in ("frame", "kind"):
+                if m is not None and m in universes[uni]:
+                    return ast.dump(subj), frozenset([m]), uni
+            if (isinstance(memb, ast.Constant)
+                    and isinstance(memb.value, int)
+                    and str(memb.value) in universes["version"]
+                    and _versionish(subj)):
+                return ast.dump(subj), frozenset([str(memb.value)]), "version"
+    elif isinstance(op, ast.In) and isinstance(right,
+                                               (ast.Tuple, ast.List, ast.Set)):
+        members = [_member(e) for e in right.elts]
+        for uni in ("frame", "kind"):
+            if members and all(m is not None and m in universes[uni]
+                               for m in members):
+                return ast.dump(left), frozenset(members), uni
+        if (right.elts and _versionish(left)
+                and all(isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)
+                        and str(e.value) in universes["version"]
+                        for e in right.elts)):
+            return (ast.dump(left),
+                    frozenset(str(e.value) for e in right.elts), "version")
+    return None
+
+
+def _is_catchall(stmts: Sequence[ast.stmt]) -> bool:
+    """Does this else body relay the unknown tag — raise, build an
+    ``error=...`` envelope, or assign into an ``*error*`` name?"""
+    for s in stmts:
+        for node in ast.walk(s):
+            if isinstance(node, ast.Raise):
+                return True
+            if isinstance(node, ast.Call) and any(
+                    kw.arg == "error" for kw in node.keywords):
+                return True
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and "error" in t.id.lower()
+                    for t in node.targets):
+                return True
+    return False
+
+
+def _ladder(head: ast.If) -> Tuple[List[ast.If], List[ast.stmt]]:
+    """Follow the elif chain from ``head``; returns (branch Ifs, final
+    else body)."""
+    branches = [head]
+    cur = head
+    while len(cur.orelse) == 1 and isinstance(cur.orelse[0], ast.If):
+        cur = cur.orelse[0]
+        branches.append(cur)
+    return branches, cur.orelse
+
+
+def _terminal(body: Sequence[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def _iter_blocks(tree: ast.AST):
+    for node in ast.walk(tree):
+        for field in ("body", "orelse", "finalbody"):
+            blk = getattr(node, field, None)
+            if (isinstance(blk, list) and blk
+                    and all(isinstance(x, ast.stmt) for x in blk)):
+                yield blk
+
+
+def _check_chain(mi: ModuleInfo, encl, head_line: int,
+                 covered: Set[str], universe: Set[str], uni_name: str,
+                 has_catchall: bool) -> Iterable[Violation]:
+    if has_catchall or covered >= universe:
+        return
+    if RESOLVED_RE.search(mi.line(head_line)):
+        return
+    missing = ", ".join(sorted(universe - covered))
+    where = encl.get_line(head_line)
+    yield Violation(
+        "DL603", mi.relpath, head_line,
+        f"dispatch over the {uni_name} tag universe in {where} handles "
+        f"{{{', '.join(sorted(covered))}}} but not {{{missing}}} and has "
+        "no catch-all else that raises/relays WireFormatError",
+    )
+
+
+class _Encl:
+    """Line -> enclosing-function-qualname lookup for messages."""
+
+    def __init__(self, tree: ast.AST):
+        self._map = enclosing_function_map(tree)
+        self._by_line: Dict[int, str] = {}
+        for node, (qn, _fn) in self._map.items():
+            ln = getattr(node, "lineno", None)
+            if ln is not None and ln not in self._by_line:
+                self._by_line[ln] = qn
+
+    def get_line(self, line: int) -> str:
+        return self._by_line.get(line, "<module>")
+
+
+def _check_dispatches(mi: ModuleInfo,
+                      universes: Dict[str, Set[str]]) -> Iterable[Violation]:
+    encl = _Encl(mi.tree)
+    consumed: Set[int] = set()   # id(If) already folded into a ladder
+
+    # pass 1: if/elif ladders (ast.walk yields parents before their elifs,
+    # so marking elif arms consumed prevents re-checking ladder suffixes)
+    for node in ast.walk(mi.tree):
+        if not isinstance(node, ast.If) or id(node) in consumed:
+            continue
+        branches, else_body = _ladder(node)
+        for b in branches[1:]:
+            consumed.add(id(b))
+        groups: Dict[Tuple[str, str], Set[str]] = {}
+        first_line: Dict[Tuple[str, str], int] = {}
+        arm_count: Dict[Tuple[str, str], int] = {}
+        for b in branches:
+            m = _match_test(b.test, universes)
+            if m is None:
+                continue
+            subj, members, uni = m
+            groups.setdefault((subj, uni), set()).update(members)
+            first_line.setdefault((subj, uni), b.lineno)
+            arm_count[(subj, uni)] = arm_count.get((subj, uni), 0) + 1
+        for (subj, uni), covered in groups.items():
+            if arm_count[(subj, uni)] < 2:
+                continue
+            yield from _check_chain(mi, encl, first_line[(subj, uni)],
+                                    covered, universes[uni], uni,
+                                    _is_catchall(else_body))
+
+    # pass 2: sibling runs — consecutive `if <subject> == MEMBER: ...` with
+    # terminal bodies, the `_unframe_versions` style; a trailing raise
+    # right after the run is its catch-all
+    for blk in _iter_blocks(mi.tree):
+        i = 0
+        while i < len(blk):
+            s = blk[i]
+            m = (_match_test(s.test, universes)
+                 if isinstance(s, ast.If) and not s.orelse
+                 and _terminal(s.body) else None)
+            if m is None:
+                i += 1
+                continue
+            subj, members, uni = m
+            covered = set(members)
+            head_line = s.lineno
+            j = i + 1
+            while j < len(blk):
+                nxt = blk[j]
+                nm = (_match_test(nxt.test, universes)
+                      if isinstance(nxt, ast.If) and not nxt.orelse
+                      and _terminal(nxt.body) else None)
+                if nm is None or nm[0] != subj or nm[2] != uni:
+                    break
+                covered.update(nm[1])
+                j += 1
+            run_len = j - i
+            if run_len >= 2:
+                trailing_raise = j < len(blk) and isinstance(blk[j], ast.Raise)
+                yield from _check_chain(mi, encl, head_line, covered,
+                                        universes[uni], uni, trailing_raise)
+            i = j
+    return
+
+
+@checker("wire-exhaustiveness", rules={
+    "DL603": "dispatch chain over a wire.py tag universe (_F_* / K_* / "
+             "_COMPAT_VERSIONS) missing members and lacking a catch-all "
+             "else that raises/relays WireFormatError",
+})
+def check_dispatch(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    universes = _harvest_universes(mods)
+    if not any(universes.values()):
+        return
+    for mi in mods:
+        if not mi.in_runtime:
+            continue
+        yield from _check_dispatches(mi, universes)
+
+
+# -- DL604: supervisor <-> worker verb drift -----------------------------------
+
+def _control_sends(mi: ModuleInfo) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in ast.walk(mi.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else None)
+        if (name == "ControlFrame" and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            out.setdefault(node.args[0].value, node.lineno)
+    return out
+
+
+def _control_handles(mi: ModuleInfo) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in ast.walk(mi.tree):
+        if not (isinstance(node, ast.Compare) and len(node.ops) == 1):
+            continue
+        op = node.ops[0]
+        left, right = node.left, node.comparators[0]
+        if isinstance(op, ast.Eq):
+            for a, b in ((left, right), (right, left)):
+                if (isinstance(a, ast.Attribute) and a.attr == "kind"
+                        and isinstance(b, ast.Constant)
+                        and isinstance(b.value, str)):
+                    out.setdefault(b.value, node.lineno)
+        elif (isinstance(op, ast.In) and isinstance(left, ast.Attribute)
+                and left.attr == "kind"
+                and isinstance(right, (ast.Tuple, ast.List, ast.Set))):
+            for e in right.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    out.setdefault(e.value, node.lineno)
+    return out
+
+
+@checker("control-protocol", rules={
+    "DL604": "ControlFrame verb drift between supervisor.py and worker.py "
+             "(verb sent but never handled, or handled but never sent)",
+})
+def check_control(mods: List[ModuleInfo]) -> Iterable[Violation]:
+    sup = wrk = None
+    for mi in mods:
+        rel = "/" + mi.relpath.replace(os.sep, "/")
+        if rel.endswith("/runtime/supervisor.py"):
+            sup = sup or mi
+        elif rel.endswith("/runtime/worker.py"):
+            wrk = wrk or mi
+    if sup is None or wrk is None:
+        return
+    for sender, s_role, handler, h_role in ((sup, "supervisor", wrk, "worker"),
+                                            (wrk, "worker", sup,
+                                             "supervisor")):
+        sends = _control_sends(sender)
+        handles = _control_handles(handler)
+        for verb, line in sorted(sends.items()):
+            if verb in handles or CONTROL_RE.search(sender.line(line)):
+                continue
+            yield Violation(
+                "DL604", sender.relpath, line,
+                f"{s_role} sends ControlFrame({verb!r}) but the {h_role} "
+                "control loop never handles it (suppress a deliberate "
+                "asymmetry with '# deferlint: control-verb(<reason>)')",
+            )
+        for verb, line in sorted(handles.items()):
+            if verb in sends or CONTROL_RE.search(handler.line(line)):
+                continue
+            yield Violation(
+                "DL604", handler.relpath, line,
+                f"{h_role} handles ControlFrame kind {verb!r} that the "
+                f"{s_role} never sends — dead arm or missing sender "
+                "(suppress with '# deferlint: control-verb(<reason>)')",
+            )

@@ -37,7 +37,13 @@ def _enclosing_class(qn: str) -> Optional[str]:
     return parts[0] if len(parts) >= 2 else None
 
 
-@checker("thread-discipline")
+@checker("thread-discipline", rules={
+    "DL301": "threading.Thread neither daemon=True nor joined in a "
+             "shutdown path",
+    "DL302": "blocking get()/recv() loop with no stop-token path, or "
+             "unbounded join outside shutdown",
+    "DL303": "time.sleep outside the LinkChannel rate shaper",
+})
 def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
     rt = [m for m in mods if m.in_runtime]
     if not rt:

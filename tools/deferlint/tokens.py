@@ -30,7 +30,10 @@ def _token_name(expr: ast.AST):
     return None
 
 
-@checker("token-identity")
+@checker("token-identity", rules={
+    "DL501": "stop/fence singleton compared with ==/!= instead of "
+             "is/is not",
+})
 def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
     for mi in mods:
         for node in ast.walk(mi.tree):

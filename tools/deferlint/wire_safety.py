@@ -54,11 +54,18 @@ def _is_checked_call(node: ast.Call) -> bool:
     return False
 
 
-@checker("wire-safety")
+@checker("wire-safety", rules={
+    "DL101": "struct.unpack/unpack_from not behind wire._checked "
+             "(allowlist: core/codecs.py internals only)",
+    "DL102": "pickle/marshal import or eval/exec call in runtime/ or the "
+             "tools/benchmarks toolchain",
+    "DL103": "time.time() inside runtime/ (deadlines/backoff must use "
+             "time.monotonic or perf_counter)",
+})
 def check(mods: List[ModuleInfo]) -> Iterable[Violation]:
     for mi in mods:
         yield from _check_unpacks(mi)
-        if mi.in_runtime:
+        if mi.in_runtime or mi.in_toolchain:
             yield from _check_banned(mi)
 
 
@@ -107,6 +114,9 @@ def _suffix_key(relpath: str) -> str:
 
 
 def _check_banned(mi: ModuleInfo) -> Iterable[Violation]:
+    # DL102 applies to the whole hygiene scope (runtime/ + tools/ +
+    # benchmarks/); DL103's monotonic-clock discipline is runtime-only
+    # (benchmark emitters legitimately stamp wall-clock times).
     for node in ast.walk(mi.tree):
         if isinstance(node, ast.Import):
             for alias in node.names:
@@ -114,24 +124,25 @@ def _check_banned(mi: ModuleInfo) -> Iterable[Violation]:
                 if root in ("pickle", "marshal"):
                     yield Violation(
                         "DL102", mi.relpath, node.lineno,
-                        f"import of {root!r} in runtime/ (wire payloads must "
-                        "use the framed codec path, never object pickling)",
+                        f"import of {root!r} (wire payloads must use the "
+                        "framed codec path, never object pickling)",
                     )
         elif isinstance(node, ast.ImportFrom):
             root = (node.module or "").split(".")[0]
             if root in ("pickle", "marshal"):
                 yield Violation(
                     "DL102", mi.relpath, node.lineno,
-                    f"import from {root!r} in runtime/",
+                    f"import from {root!r}",
                 )
         elif isinstance(node, ast.Call):
             f = node.func
             if isinstance(f, ast.Name) and f.id in ("eval", "exec"):
                 yield Violation(
                     "DL102", mi.relpath, node.lineno,
-                    f"{f.id}() call in runtime/",
+                    f"{f.id}() call",
                 )
-            elif (isinstance(f, ast.Attribute) and f.attr == "time"
+            elif (mi.in_runtime
+                    and isinstance(f, ast.Attribute) and f.attr == "time"
                     and isinstance(f.value, ast.Name)
                     and f.value.id == "time"):
                 yield Violation(
